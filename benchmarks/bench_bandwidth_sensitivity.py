@@ -1,0 +1,51 @@
+"""Paper Figures 14 & 15 — sensitivity of S3-backed KV loading to bandwidth.
+
+Fig 14: relative TTFT increase when each path is capped at 10 Gbps vs its
+100 Gbps result — layerwise loading is intrinsically less sensitive while
+per-layer transfer hides behind compute.
+Fig 15: TTFT vs throttled rate sweep; the knee sits near the analytic
+perfect-overlap estimate, and the calibrated (+5 Gbps) target on the plateau.
+"""
+from __future__ import annotations
+
+from repro.core.compute_model import PaperComputeModel
+from repro.core.simulator import ServingSimulator, WorkloadRequest
+from repro.core.transport import S3_RDMA_AGG, S3_RDMA_BATCH
+
+from .common import row
+
+GBPS = 1e9 / 8
+
+
+def run() -> list[str]:
+    rows = []
+    sim = ServingSimulator()
+    cap10 = 10 * GBPS
+    # -- Fig 14: 10 Gbps cap across the grid --------------------------------
+    for ctx in (4096, 65536):
+        for hit in (0.5, 0.875):
+            w = WorkloadRequest(f"{ctx}/{hit}", ctx, hit, 64)
+            for name, fn in (
+                    ("S3Agg-LW", lambda rl: sim.ttft_layerwise(
+                        w, S3_RDMA_AGG, rate_limit=rl).ttft_s),
+                    ("S3Batch-CW", lambda rl: sim.ttft_chunkwise(
+                        w, S3_RDMA_BATCH, rate_limit=rl).ttft_s)):
+                full = fn(None)
+                capped = fn(cap10)
+                rows.append(row(
+                    f"fig14/{ctx//1024}K/h{hit}/{name}", capped * 1e6,
+                    f"ttft_increase_pct={100*(capped/full-1):.1f}"))
+    # -- Fig 15: rate sweep knee --------------------------------------------
+    m = PaperComputeModel()
+    for ctx, hit in ((16384, 0.875), (65536, 0.875)):
+        w = WorkloadRequest(f"{ctx}/{hit}", ctx, hit, 64)
+        best = sim.ttft_layerwise(w, S3_RDMA_AGG).ttft_s
+        breq = m.required_bw(ctx, hit)
+        for mult in (0.5, 0.8, 1.0, 1.2, 1.5, 2.0):
+            rate = breq * mult
+            t = sim.ttft_layerwise(w, S3_RDMA_AGG, rate_limit=rate).ttft_s
+            rows.append(row(
+                f"fig15/{ctx//1024}K/h{hit}/rate{mult:.1f}xBreq", t * 1e6,
+                f"ttft_increase_pct={100*(t/best-1):.1f};"
+                f"Breq_GBps={breq/1e9:.2f}"))
+    return rows

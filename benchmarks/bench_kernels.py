@@ -1,0 +1,54 @@
+"""Pallas kernel micro-bench: wall time (interpret mode on CPU — semantics
+validation; Mosaic on TPU) and max deviation vs the pure-jnp oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kv_gather import kv_gather
+
+from .common import row, timeit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> list[str]:
+    rows = []
+    # flash attention
+    q = jax.random.normal(KEY, (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(KEY, (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(KEY, (1, 2, 256, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    err = float(jnp.abs(out - ref.ref_flash_attention(q, k, v)).max())
+    wall = timeit(lambda: flash_attention(q, k, v, causal=True,
+                                          interpret=True), repeat=3)
+    flops = 4 * 256 * 256 * 4 * 64 / 2
+    rows.append(row("kernel/flash_attn/256x4h", wall * 1e6,
+                    f"max_err={err:.2e};flops={flops:.2e}"))
+
+    # decode attention
+    qd = jax.random.normal(KEY, (4, 8, 64), jnp.float32)
+    kc = jax.random.normal(KEY, (4, 1024, 2, 64), jnp.float32)
+    vc = jax.random.normal(KEY, (4, 1024, 2, 64), jnp.float32)
+    lens = jnp.array([1000, 512, 64, 1024])
+    outd = decode_attention(qd, kc, vc, lens, block_s=256, interpret=True)
+    errd = float(jnp.abs(outd - ref.ref_decode_attention(qd, kc, vc, lens)).max())
+    walld = timeit(lambda: decode_attention(qd, kc, vc, lens, block_s=256,
+                                            interpret=True), repeat=3)
+    rows.append(row("kernel/decode_attn/1k_cache", walld * 1e6,
+                    f"max_err={errd:.2e};cache_MB={kc.nbytes*2/1e6:.1f}"))
+
+    # kv gather (ObjectCache on-device aggregation)
+    pool = jax.random.normal(KEY, (256, 16, 256), jnp.float32)
+    idx = jax.random.randint(KEY, (64,), 0, 256)
+    outg = kv_gather(pool, idx, interpret=True)
+    errg = float(jnp.abs(outg - ref.ref_kv_gather(pool, idx)).max())
+    wallg = timeit(lambda: kv_gather(pool, idx, interpret=True), repeat=3)
+    rows.append(row("kernel/kv_gather/64of256", wallg * 1e6,
+                    f"max_err={errg:.2e};bytes={outg.nbytes}"))
+    return rows

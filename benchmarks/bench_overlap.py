@@ -1,0 +1,28 @@
+"""Paper Figure 12 + Table A8 — layerwise overlap feasibility.
+
+Required per-layer transfer throughput B_req = D^(l)/t^(l) for the canonical
+(context, hit-rate) grid, checked against the paper's Table A8 values; the
+boundary against ObjectCache's ~5 GB/s aggregation throughput classifies each
+cell compute- vs transfer-bound.
+"""
+from __future__ import annotations
+
+from repro.core.compute_model import A100_LLAMA31_8B, PaperComputeModel
+
+from .common import row
+
+AGG_SUSTAINED = 5e9  # measured S3Agg-LW sustained throughput (paper §5.5)
+
+
+def run() -> list[str]:
+    rows = []
+    m = PaperComputeModel()
+    for (ctx, hit), (_, total_ms, layer_ms, bw_gbs) in sorted(A100_LLAMA31_8B.items()):
+        breq = m.required_bw(ctx, hit)
+        bound = "compute" if breq <= AGG_SUSTAINED else "transfer"
+        err = abs(breq / 1e9 - bw_gbs) / bw_gbs
+        rows.append(row(
+            f"fig12_a8/{ctx//1024}K/{hit:.3f}", total_ms * 1e3,
+            f"req_BW_GBps={breq/1e9:.2f};paper_GBps={bw_gbs};"
+            f"rel_err={err:.3f};bound={bound}"))
+    return rows

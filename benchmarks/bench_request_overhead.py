@@ -1,0 +1,23 @@
+"""Paper Figure 10 — per-request latency breakdown of S3RDMA-Direct.
+
+After RDMA removes TCP data movement, fixed control-plane work dominates
+small objects; the breakdown columns reproduce that crossover.
+"""
+from __future__ import annotations
+
+from repro.core.transport import S3_RDMA_DIRECT
+
+from .common import row
+
+
+def run() -> list[str]:
+    rows = []
+    for size in (16 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20):
+        t = S3_RDMA_DIRECT.single_get(size)
+        total = t.total_s
+        rows.append(row(
+            f"fig10/direct/{size >> 10}KB", total * 1e6,
+            f"control_pct={100*t.control_plane_s/total:.0f};"
+            f"storage_pct={100*t.storage_s/total:.0f};"
+            f"network_pct={100*t.network_s/total:.0f}"))
+    return rows

@@ -1,0 +1,22 @@
+"""Shared benchmark helpers: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+
+def timeit(fn: Callable, *, repeat: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping:
+  bench_transport             Fig 8 (raw storage) + Fig 9 (S3 paths)
+  bench_request_overhead      Fig 10 (per-request breakdown)
+  bench_aggregation           Fig 11 + Table A7/Appendix E (aggregation)
+  bench_overlap               Fig 12 + Table A8 (overlap feasibility)
+  bench_ttft                  Fig 13 (end-to-end TTFT grid)
+  bench_bandwidth_sensitivity Fig 14 + Fig 15 (caps and rate sweeps)
+  bench_scheduler             Fig 16 + Tables A9/A12 (multi-tenant policies)
+  bench_granularity           Table A6 + Fig 3 (recompute vs granularity)
+  bench_kernels               Pallas kernels vs oracles
+  bench_engine                real serving engine (cold/warm, batching)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (bench_aggregation, bench_bandwidth_sensitivity, bench_engine,
+               bench_granularity, bench_kernels, bench_overlap,
+               bench_request_overhead, bench_scheduler, bench_transport,
+               bench_ttft)
+
+MODULES = [bench_transport, bench_request_overhead, bench_aggregation,
+           bench_overlap, bench_ttft, bench_bandwidth_sensitivity,
+           bench_scheduler, bench_granularity, bench_kernels, bench_engine]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

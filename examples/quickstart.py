@@ -1,0 +1,57 @@
+"""Quickstart: serve an LLM with ObjectCache prefix reuse in ~40 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+
+What happens: two requests share a 64-token system prompt.  The first request
+computes everything and commits its KV chunks (rolling-hash keys) to the
+object store; the second matches the prefix in the radix index, fetches it
+back via server-side LAYERWISE aggregation (Table A3 of the paper), and only
+computes the 32-token suffix — the logits are identical either way.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import Gateway, InMemoryStore, RadixIndex
+from repro.models import build_model
+from repro.serving import Orchestrator, ServingEngine
+
+CHUNK_TOKENS = 16  # G — fine granularity preserves branch points (Fig. 3)
+
+cfg = get_smoke_config("llama3-1-8b")  # the paper's model family, CPU-sized
+model = build_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+
+spec = cfg.kv_spec(CHUNK_TOKENS,
+                   dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize)
+orch = Orchestrator(index=RadixIndex(CHUNK_TOKENS),
+                    gateway=Gateway(InMemoryStore()),
+                    spec=spec, theta_bytes=0)  # theta=0 -> always layerwise
+engine = ServingEngine(model, params, orch)
+
+rng = np.random.default_rng(0)
+system_prompt = rng.integers(0, cfg.vocab_size, size=64)
+req_a = np.concatenate([system_prompt, rng.integers(0, cfg.vocab_size, 32)])
+req_b = np.concatenate([system_prompt, rng.integers(0, cfg.vocab_size, 32)])
+
+ra = engine.submit(req_a, "A", max_new_tokens=8)
+rb = engine.submit(req_b, "B", max_new_tokens=8)
+
+print(f"A: hit={ra.matched_tokens:3d} tokens  mode={ra.delivery}  "
+      f"generated={ra.new_tokens}")
+print(f"B: hit={rb.matched_tokens:3d} tokens  mode={rb.delivery.value}  "
+      f"generated={rb.new_tokens}")
+assert rb.matched_tokens == 64, "B must reuse the shared system prompt"
+
+# correctness: a fresh engine that never saw A produces identical logits
+fresh = ServingEngine(model, params,
+                      Orchestrator(RadixIndex(CHUNK_TOKENS),
+                                   Gateway(InMemoryStore()), spec))
+rf = fresh.submit(req_b, "B-fresh")
+np.testing.assert_allclose(rb.logits, rf.logits, rtol=1e-4, atol=1e-4)
+print("OK: cached-prefix logits == from-scratch logits")
+print("store:", orch.gateway.store.stats.snapshot())

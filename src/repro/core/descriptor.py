@@ -1,0 +1,98 @@
+"""The ObjectCache request descriptor (paper §3.2, Table 1).
+
+The descriptor extends a normal S3-compatible request: it names the matched
+chunk keys, the model layout, the delivery order, and the RDMA target.  It is
+intentionally *arithmetic rather than manifest-heavy* — because every chunk of
+one deployment has the same per-layer size S, the server derives every byte
+range from (L, G, S) without per-object manifests.
+
+Wire format: a compact binary header (as would ride an HTTP header /
+`x-amz-meta-objectcache` field), plus JSON for debugging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+from .hashing import KEY_BYTES
+from .types import Delivery, KVSpec
+
+_MAGIC = b"OBJC"
+_VERSION = 1
+# magic, version, num_keys, num_layers, chunk_tokens, per_layer_chunk_bytes,
+# delivery, rdma_addr, rdma_rkey, rdma_len
+_HEADER = struct.Struct("<4sBIIIIBQIQ")
+
+
+@dataclasses.dataclass(frozen=True)
+class RdmaTarget:
+    """Client buffer the storage server writes into (address, rkey, length)."""
+
+    addr: int
+    rkey: int
+    length: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Descriptor:
+    """Table 1 of the paper."""
+
+    chunk_keys: tuple[bytes, ...]  # [H_0 .. H_{N-1}], matched prefix chunks
+    num_layers: int  # L
+    chunk_tokens: int  # G
+    per_layer_chunk_bytes: int  # S
+    delivery: Delivery
+    rdma_target: RdmaTarget
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunk_keys)
+
+    @property
+    def total_bytes(self) -> int:
+        """W = N * L * S (Eq. 2)."""
+        return self.num_chunks * self.num_layers * self.per_layer_chunk_bytes
+
+    @property
+    def layer_payload_bytes(self) -> int:
+        """Bytes of one aggregated layer payload (N * S)."""
+        return self.num_chunks * self.per_layer_chunk_bytes
+
+    # -- wire ----------------------------------------------------------------
+    def to_wire(self) -> bytes:
+        head = _HEADER.pack(
+            _MAGIC, _VERSION, self.num_chunks, self.num_layers, self.chunk_tokens,
+            self.per_layer_chunk_bytes, 1 if self.delivery is Delivery.LAYERWISE else 0,
+            self.rdma_target.addr, self.rdma_target.rkey, self.rdma_target.length)
+        return head + b"".join(self.chunk_keys)
+
+    @classmethod
+    def from_wire(cls, buf: bytes) -> "Descriptor":
+        magic, ver, n, L, G, S, lw, addr, rkey, length = _HEADER.unpack_from(buf, 0)
+        if magic != _MAGIC or ver != _VERSION:
+            raise ValueError("not an ObjectCache descriptor")
+        off = _HEADER.size
+        keys = tuple(buf[off + i * KEY_BYTES: off + (i + 1) * KEY_BYTES] for i in range(n))
+        if len(buf) != off + n * KEY_BYTES:
+            raise ValueError("descriptor length mismatch")
+        return cls(keys, L, G, S, Delivery.LAYERWISE if lw else Delivery.CHUNKWISE,
+                   RdmaTarget(addr, rkey, length))
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "chunk_keys": [k.hex() for k in self.chunk_keys],
+            "num_layers": self.num_layers,
+            "chunk_tokens": self.chunk_tokens,
+            "per_layer_chunk_bytes": self.per_layer_chunk_bytes,
+            "delivery": self.delivery.value,
+            "rdma_target": dataclasses.asdict(self.rdma_target),
+        })
+
+
+def make_descriptor(chunk_keys: list[bytes] | tuple[bytes, ...], spec: KVSpec,
+                    delivery: Delivery, rdma: RdmaTarget | None = None) -> Descriptor:
+    rdma = rdma or RdmaTarget(0, 0, len(chunk_keys) * spec.chunk_bytes)
+    return Descriptor(tuple(chunk_keys), spec.num_layers, spec.chunk_tokens,
+                      spec.per_layer_chunk_bytes, delivery, rdma)

@@ -1,0 +1,234 @@
+"""Object-store backends.
+
+``InMemoryStore`` is the unit-test substrate; ``FileStore`` persists chunk
+objects to disk (the laptop stand-in for DAOS/S3); ``TieredStore`` composes a
+DRAM hot tier over a cold object tier — the hierarchy of paper §6.1 / Table A5
+(GPU VRAM > DRAM > remote DRAM > NVMe > object storage).
+
+All stores speak the same minimal interface: immutable puts keyed by
+content-derived hashes, whole-object gets, and *range* gets — the primitive
+server-side layer aggregation is built from (paper Table A3: RANGEGET(H_j,
+l*S, S)).
+"""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+from abc import ABC, abstractmethod
+from typing import Iterable, Optional
+
+
+class ObjectStore(ABC):
+    @abstractmethod
+    def put(self, key: bytes, data: bytes) -> None: ...
+
+    @abstractmethod
+    def get(self, key: bytes) -> bytes: ...
+
+    @abstractmethod
+    def range_get(self, key: bytes, offset: int, length: int) -> bytes: ...
+
+    @abstractmethod
+    def contains(self, key: bytes) -> bool: ...
+
+    @abstractmethod
+    def delete(self, key: bytes) -> None: ...
+
+    @abstractmethod
+    def object_size(self, key: bytes) -> int: ...
+
+
+class StoreStats:
+    def __init__(self) -> None:
+        self.puts = 0
+        self.gets = 0
+        self.range_gets = 0
+        self.bytes_read = 0
+        self.bytes_written = 0
+        self.dedup_hits = 0
+        self._lock = threading.Lock()
+
+    def snapshot(self) -> dict:
+        return {k: v for k, v in self.__dict__.items() if not k.startswith("_")}
+
+
+class InMemoryStore(ObjectStore):
+    def __init__(self) -> None:
+        self._data: dict[bytes, bytes] = {}
+        self._lock = threading.RLock()
+        self.stats = StoreStats()
+
+    def put(self, key: bytes, data: bytes) -> None:
+        with self._lock:
+            if key in self._data:
+                self.stats.dedup_hits += 1  # immutable + content-addressed
+                return
+            self._data[key] = bytes(data)
+            self.stats.puts += 1
+            self.stats.bytes_written += len(data)
+
+    def get(self, key: bytes) -> bytes:
+        with self._lock:
+            data = self._data[key]
+            self.stats.gets += 1
+            self.stats.bytes_read += len(data)
+            return data
+
+    def range_get(self, key: bytes, offset: int, length: int) -> bytes:
+        with self._lock:
+            data = self._data[key]
+            self.stats.range_gets += 1
+            self.stats.bytes_read += length
+            return data[offset:offset + length]
+
+    def contains(self, key: bytes) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def delete(self, key: bytes) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def object_size(self, key: bytes) -> int:
+        with self._lock:
+            return len(self._data[key])
+
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._data.values())
+
+
+class FileStore(ObjectStore):
+    """One file per object under ``root`` (two-level fanout on key hex)."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.RLock()
+        self.stats = StoreStats()
+
+    def _path(self, key: bytes) -> str:
+        h = key.hex()
+        return os.path.join(self.root, h[:2], h)
+
+    def put(self, key: bytes, data: bytes) -> None:
+        path = self._path(key)
+        with self._lock:
+            if os.path.exists(path):
+                self.stats.dedup_hits += 1
+                return
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)  # atomic commit — immutability invariant
+            self.stats.puts += 1
+            self.stats.bytes_written += len(data)
+
+    def get(self, key: bytes) -> bytes:
+        with open(self._path(key), "rb") as f:
+            data = f.read()
+        self.stats.gets += 1
+        self.stats.bytes_read += len(data)
+        return data
+
+    def range_get(self, key: bytes, offset: int, length: int) -> bytes:
+        with open(self._path(key), "rb") as f:
+            f.seek(offset)
+            data = f.read(length)
+        self.stats.range_gets += 1
+        self.stats.bytes_read += len(data)
+        return data
+
+    def contains(self, key: bytes) -> bool:
+        return os.path.exists(self._path(key))
+
+    def delete(self, key: bytes) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def object_size(self, key: bytes) -> int:
+        return os.path.getsize(self._path(key))
+
+
+class TieredStore(ObjectStore):
+    """DRAM hot cache over a cold object tier (paper §6.1).
+
+    Reads promote into the hot tier (LRU, byte-capacity bound); writes go
+    through to the cold tier and optionally populate hot.  ObjectCache is the
+    *capacity* tier; this class is how a deployment keeps its hottest prefixes
+    near the serving node without changing any protocol semantics.
+    """
+
+    def __init__(self, cold: ObjectStore, hot_capacity_bytes: int,
+                 populate_on_write: bool = True) -> None:
+        self.cold = cold
+        self.hot_capacity = hot_capacity_bytes
+        self.populate_on_write = populate_on_write
+        self._hot: "collections.OrderedDict[bytes, bytes]" = collections.OrderedDict()
+        self._hot_bytes = 0
+        self._lock = threading.RLock()
+        self.hot_hits = 0
+        self.hot_misses = 0
+
+    def _admit(self, key: bytes, data: bytes) -> None:
+        if len(data) > self.hot_capacity:
+            return
+        with self._lock:
+            if key in self._hot:
+                self._hot.move_to_end(key)
+                return
+            self._hot[key] = data
+            self._hot_bytes += len(data)
+            while self._hot_bytes > self.hot_capacity:
+                _, victim = self._hot.popitem(last=False)
+                self._hot_bytes -= len(victim)
+
+    def put(self, key: bytes, data: bytes) -> None:
+        self.cold.put(key, data)
+        if self.populate_on_write:
+            self._admit(key, bytes(data))
+
+    def get(self, key: bytes) -> bytes:
+        with self._lock:
+            hit = self._hot.get(key)
+            if hit is not None:
+                self._hot.move_to_end(key)
+                self.hot_hits += 1
+                return hit
+        self.hot_misses += 1
+        data = self.cold.get(key)
+        self._admit(key, data)
+        return data
+
+    def range_get(self, key: bytes, offset: int, length: int) -> bytes:
+        with self._lock:
+            hit = self._hot.get(key)
+            if hit is not None:
+                self._hot.move_to_end(key)
+                self.hot_hits += 1
+                return hit[offset:offset + length]
+        self.hot_misses += 1
+        return self.cold.range_get(key, offset, length)
+
+    def contains(self, key: bytes) -> bool:
+        with self._lock:
+            if key in self._hot:
+                return True
+        return self.cold.contains(key)
+
+    def delete(self, key: bytes) -> None:
+        with self._lock:
+            data = self._hot.pop(key, None)
+            if data is not None:
+                self._hot_bytes -= len(data)
+        self.cold.delete(key)
+
+    def object_size(self, key: bytes) -> int:
+        with self._lock:
+            if key in self._hot:
+                return len(self._hot[key])
+        return self.cold.object_size(key)

@@ -1,0 +1,147 @@
+"""Chunk-granular radix prefix index (paper §2.1, Fig. 3).
+
+Because chunk keys form a rolling-hash chain (H_i depends on H_{i-1}), the set
+of committed chunks *is* a radix tree over token prefixes: each node is one
+G-token chunk; children diverge where requests diverge.  Fine granularity
+preserves branch points (Fig. 3a); coarse granularity merges them and forces
+recompute of otherwise reusable tokens (Fig. 3b) — quantified in
+benchmarks/bench_granularity.py against Appendix Table A6.
+
+The index is deliberately cheap: Fig. 4 shows lookup cost is small relative to
+tokenization even at G = 16, so the serving bottleneck is delivery, not lookup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+from .hashing import GENESIS, chunk_keys
+from .types import MatchResult
+
+
+@dataclasses.dataclass
+class _Node:
+    key: bytes
+    parent: Optional["_Node"]
+    depth: int  # chunks from root (root = 0)
+    children: dict[bytes, "_Node"] = dataclasses.field(default_factory=dict)
+    last_access: float = 0.0
+    hits: int = 0
+    pinned: int = 0  # in-flight references; pinned nodes are not evictable
+
+
+class RadixIndex:
+    """Longest-prefix chunk matcher with LRU leaf eviction.
+
+    Thread-safe: the serving orchestrator matches on the request path while a
+    write-behind thread commits freshly produced chunks.
+    """
+
+    def __init__(self, chunk_tokens: int, max_chunks: int | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.chunk_tokens = chunk_tokens
+        self.max_chunks = max_chunks
+        self._clock = clock
+        self._root = _Node(GENESIS, None, 0)
+        self._nodes: dict[bytes, _Node] = {}
+        self._lock = threading.RLock()
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    # -- lookup ---------------------------------------------------------------
+    def match(self, tokens: Sequence[int] | np.ndarray) -> MatchResult:
+        """Longest cached prefix of ``tokens``, in whole chunks."""
+        keys = chunk_keys(tokens, self.chunk_tokens)
+        now = self._clock()
+        matched: list[bytes] = []
+        with self._lock:
+            node = self._root
+            for k in keys:
+                child = node.children.get(k)
+                if child is None:
+                    break
+                child.last_access = now
+                child.hits += 1
+                matched.append(k)
+                node = child
+        return MatchResult(tuple(matched), len(matched) * self.chunk_tokens)
+
+    # -- insert ---------------------------------------------------------------
+    def insert(self, tokens: Sequence[int] | np.ndarray) -> list[bytes]:
+        """Register every complete chunk of ``tokens``; returns the *new* keys
+        (the caller uploads exactly those objects — dedup is free because the
+        keys are content-derived)."""
+        keys = chunk_keys(tokens, self.chunk_tokens)
+        now = self._clock()
+        new: list[bytes] = []
+        with self._lock:
+            node = self._root
+            for k in keys:
+                child = node.children.get(k)
+                if child is None:
+                    child = _Node(k, node, node.depth + 1, last_access=now)
+                    node.children[k] = child
+                    self._nodes[k] = child
+                    new.append(k)
+                else:
+                    child.last_access = now
+                node = child
+            self._maybe_evict()
+        return new
+
+    def contains(self, key: bytes) -> bool:
+        with self._lock:
+            return key in self._nodes
+
+    def pin(self, keys: Iterable[bytes]) -> None:
+        with self._lock:
+            for k in keys:
+                n = self._nodes.get(k)
+                if n:
+                    n.pinned += 1
+
+    def unpin(self, keys: Iterable[bytes]) -> None:
+        with self._lock:
+            for k in keys:
+                n = self._nodes.get(k)
+                if n and n.pinned > 0:
+                    n.pinned -= 1
+
+    # -- eviction ---------------------------------------------------------------
+    def _maybe_evict(self) -> list[bytes]:
+        if self.max_chunks is None or len(self._nodes) <= self.max_chunks:
+            return []
+        evicted: list[bytes] = []
+        # Leaf-first LRU: internal nodes cannot be evicted without severing
+        # their descendants' hash chain.
+        while len(self._nodes) > self.max_chunks:
+            leaves = [n for n in self._nodes.values() if not n.children and n.pinned == 0]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_access)
+            victim.parent.children.pop(victim.key, None)
+            del self._nodes[victim.key]
+            evicted.append(victim.key)
+            self.evictions += 1
+        return evicted
+
+    # -- introspection ----------------------------------------------------------
+    def branch_points(self) -> int:
+        """Nodes with >1 child — the reuse-preserving divergences of Fig. 3."""
+        with self._lock:
+            return sum(1 for n in [self._root, *self._nodes.values()]
+                       if len(n.children) > 1)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "chunks": len(self._nodes),
+                "branch_points": self.branch_points(),
+                "evictions": self.evictions,
+            }

@@ -1,0 +1,193 @@
+"""Bandwidth-aware transfer scheduling (paper §3.6, Appendix Table A4).
+
+Under a shared bandwidth cap B, each layerwise request i is characterised by
+its per-layer transfer size s_i and per-layer compute window c_i (both ~constant
+across layers — footnote 1).  Allocating rate r_i gives per-layer stall
+
+    tau_i(r_i) = max(0, s_i / r_i - c_i)                       (Eq. 4)
+
+which vanishes at the zero-stall rate r_i* = s_i / c_i.  Minimising total stall
+under the budget reduces (Eq. 5 → Eq. 6) to the convex program
+
+    min  sum_i s_i / r_i   s.t.  sum_i r_i = B,  0 < r_i <= r_i*.
+
+KKT: uncapped requests satisfy r_i ∝ sqrt(s_i); requests whose water-filling
+share exceeds their cap are pinned at it and the residual budget is re-filled —
+iterative capping terminates in <= n rounds and is exact.  *Calibrated*
+Stall-opt (Eq. 7) raises each cap to r̂_i = r_i* + delta so the operating point
+sits on the measured TTFT plateau rather than on the knee.
+
+This module reproduces the paper's Appendix Table A9 allocations to rounding
+precision (see tests/test_scheduler.py and benchmarks/bench_scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterable, Mapping, Sequence
+
+from .types import FlowRequest
+
+
+class Policy(enum.Enum):
+    EQUAL = "equal"  # B/n each, ignoring size and slack
+    KV_PROP = "kv-prop"  # proportional to retrieved KV bytes
+    BW_PROP = "bw-prop"  # proportional to zero-stall estimate r_i*
+    STALL_OPT = "stall-opt"  # Eq. 6 exact solution
+    CAL_STALL_OPT = "cal-stall-opt"  # Eq. 7: caps shifted by +delta
+
+
+def zero_stall_rate(req: FlowRequest) -> float:
+    return req.zero_stall_rate
+
+
+def per_layer_stall(req: FlowRequest, rate: float) -> float:
+    """tau_i(r_i) (Eq. 4)."""
+    if rate <= 0:
+        return math.inf
+    return max(0.0, req.bytes_per_layer / rate - req.layer_compute_s)
+
+
+def added_ttft(req: FlowRequest, rate: float) -> float:
+    """Stall accumulated over the L-1 overlapped stages of Eq. 3 plus the
+    first-layer exposure — the scheduler-visible part of added TTFT."""
+    if rate <= 0:
+        return math.inf
+    x = req.bytes_per_layer / rate
+    stall = max(0.0, x - req.layer_compute_s)
+    return x + (req.num_layers - 1) * stall
+
+
+def _waterfill(requests: Sequence[FlowRequest], budget: float,
+               caps: Mapping[str, float]) -> dict[str, float]:
+    """Exact solution of Eq. 6 by iterative capping.
+
+    Uncapped allocation is r_i = R * sqrt(s_i) / sum_j sqrt(s_j); any request
+    whose share meets its cap is fixed there and removed.  Because the sum of
+    shares equals the remaining budget, fixing over-cap requests never
+    overdraws, and each round strictly shrinks the active set.
+    """
+    active = list(requests)
+    alloc: dict[str, float] = {}
+    remaining = budget
+    while active:
+        denom = sum(math.sqrt(r.bytes_per_layer) for r in active)
+        if denom == 0.0 or remaining <= 0.0:
+            for r in active:
+                alloc[r.req_id] = 0.0
+            break
+        shares = {r.req_id: remaining * math.sqrt(r.bytes_per_layer) / denom
+                  for r in active}
+        over = [r for r in active if shares[r.req_id] >= caps[r.req_id]]
+        if not over:
+            alloc.update(shares)
+            break
+        for r in over:
+            alloc[r.req_id] = caps[r.req_id]
+            remaining -= caps[r.req_id]
+        active = [r for r in active if r not in over]
+    return alloc
+
+
+def allocate(requests: Sequence[FlowRequest], budget: float, policy: Policy,
+             margin: float = 0.0) -> dict[str, float]:
+    """Per-request rates (B/s) under a shared cap ``budget`` (B/s).
+
+    ``margin`` is the calibration offset delta of Eq. 7 (B/s); it applies only
+    to CAL_STALL_OPT.
+    """
+    if not requests:
+        return {}
+    n = len(requests)
+    if policy is Policy.EQUAL:
+        return {r.req_id: budget / n for r in requests}
+    if policy is Policy.KV_PROP:
+        total = sum(r.total_bytes for r in requests)
+        return {r.req_id: budget * r.total_bytes / total for r in requests}
+    if policy is Policy.BW_PROP:
+        total = sum(r.zero_stall_rate for r in requests)
+        return {r.req_id: budget * r.zero_stall_rate / total for r in requests}
+    delta = margin if policy is Policy.CAL_STALL_OPT else 0.0
+    caps = {r.req_id: r.zero_stall_rate + delta for r in requests}
+    if sum(caps.values()) <= budget:
+        # Unconstrained: everyone gets its (calibrated) zero-stall rate; the
+        # leftover stays idle — extra bandwidth yields no latency benefit.
+        return dict(caps)
+    return _waterfill(requests, budget, caps)
+
+
+def total_transfer_time(requests: Sequence[FlowRequest],
+                        alloc: Mapping[str, float]) -> float:
+    """Objective of Eq. 6 — sum_i s_i / r_i (per layer)."""
+    return sum(r.bytes_per_layer / alloc[r.req_id] for r in requests
+               if alloc[r.req_id] > 0)
+
+
+# ---------------------------------------------------------------------------
+# Epoch-based pool (§3.6 last paragraph)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Flow:
+    req: FlowRequest
+    rate: float
+    remaining_bytes: float
+
+
+class BandwidthPool:
+    """Admits layerwise flows in epochs with stable per-epoch rates.
+
+    If a flow finishes early its bandwidth returns to the pool *at the next
+    epoch boundary* rather than being redistributed immediately — per-request
+    transfer times stay predictable, so the serving node never reacts to
+    unexpected bandwidth changes mid-epoch.
+    """
+
+    def __init__(self, budget: float, policy: Policy = Policy.CAL_STALL_OPT,
+                 margin: float = 0.0, epoch_s: float = 0.1) -> None:
+        self.budget = budget
+        self.policy = policy
+        self.margin = margin
+        self.epoch_s = epoch_s
+        self._flows: dict[str, _Flow] = {}
+        self._pending: list[FlowRequest] = []
+        self._epoch_start = 0.0
+        self.epochs = 0
+
+    def submit(self, req: FlowRequest) -> None:
+        self._pending.append(req)
+
+    def rates(self) -> dict[str, float]:
+        return {fid: f.rate for fid, f in self._flows.items()}
+
+    def start_epoch(self, now: float) -> dict[str, float]:
+        """Re-admit pending + surviving flows and fix rates for this epoch."""
+        self._epoch_start = now
+        self.epochs += 1
+        live = [f.req for f in self._flows.values() if f.remaining_bytes > 0]
+        admitted = live + self._pending
+        self._pending = []
+        alloc = allocate(admitted, self.budget, self.policy, self.margin)
+        old = self._flows
+        self._flows = {}
+        for req in admitted:
+            prev = old.get(req.req_id)
+            rem = prev.remaining_bytes if prev else req.total_bytes
+            self._flows[req.req_id] = _Flow(req, alloc[req.req_id], rem)
+        return alloc
+
+    def advance(self, dt: float) -> list[str]:
+        """Progress all flows by ``dt`` seconds; returns ids that completed.
+
+        Completed flows keep holding their bandwidth until the next
+        ``start_epoch`` (the paper's conservative rule).
+        """
+        done = []
+        for fid, f in self._flows.items():
+            if f.remaining_bytes <= 0:
+                continue
+            f.remaining_bytes -= f.rate * dt
+            if f.remaining_bytes <= 0:
+                f.remaining_bytes = 0.0
+                done.append(fid)
+        return done

@@ -1,0 +1,134 @@
+"""Shared value types for the ObjectCache core.
+
+Terminology follows the paper (§2.1, Eq. 1):
+
+    KV_token       = 2 * L * n_kv * d * p          bytes of KV state per token
+    S_layer_chunk  = 2 * G * n_kv * d * p          bytes of one layer's slice of a chunk
+
+A *chunk* is the immutable unit of storage: ``G`` consecutive tokens' KV for all
+``L`` layers, laid out ``KV_L2TD`` (Layer-major, the 2 K/V matrices concatenated
+per layer, then Token position, then hidden Dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+GiB = 1024**3
+MiB = 1024**2
+KiB = 1024
+
+
+class Delivery(enum.Enum):
+    """Delivery order requested by a descriptor (paper Table 1, §3.4)."""
+
+    CHUNKWISE = "chunkwise"
+    LAYERWISE = "layerwise"
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    """Geometry of the KV cache for one model deployment.
+
+    Every chunk in the same deployment has identical shape, which is what lets
+    the descriptor stay "arithmetic rather than manifest-heavy" (§3.2): the byte
+    range of layer ``l`` inside any chunk is ``[l*S, (l+1)*S)``.
+    """
+
+    num_layers: int  # L
+    chunk_tokens: int  # G
+    num_kv_heads: int  # n_kv
+    head_dim: int  # d
+    dtype_bytes: int = 2  # p (bf16 default)
+
+    @property
+    def per_layer_chunk_bytes(self) -> int:
+        """S = 2 * G * n_kv * d * p (Eq. 1)."""
+        return 2 * self.chunk_tokens * self.num_kv_heads * self.head_dim * self.dtype_bytes
+
+    @property
+    def chunk_bytes(self) -> int:
+        return self.num_layers * self.per_layer_chunk_bytes
+
+    @property
+    def bytes_per_token(self) -> int:
+        """KV_token = 2 * L * n_kv * d * p (Eq. 1)."""
+        return 2 * self.num_layers * self.num_kv_heads * self.head_dim * self.dtype_bytes
+
+    @property
+    def bytes_per_token_per_layer(self) -> int:
+        return 2 * self.num_kv_heads * self.head_dim * self.dtype_bytes
+
+    def matched_payload_bytes(self, num_chunks: int) -> int:
+        """W = N * L * S (Eq. 2) — total bytes of a matched prefix."""
+        return num_chunks * self.chunk_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchResult:
+    """Result of a radix-tree prefix lookup (§2.1)."""
+
+    chunk_keys: tuple[bytes, ...]
+    matched_tokens: int
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunk_keys)
+
+    @property
+    def is_hit(self) -> bool:
+        return self.matched_tokens > 0
+
+
+@dataclasses.dataclass
+class Timing:
+    """Per-request latency breakdown (paper Fig. 10 splits these components)."""
+
+    control_plane_s: float = 0.0
+    storage_s: float = 0.0
+    network_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.control_plane_s + self.storage_s + self.network_s
+
+    def __add__(self, other: "Timing") -> "Timing":
+        return Timing(
+            self.control_plane_s + other.control_plane_s,
+            self.storage_s + other.storage_s,
+            self.network_s + other.network_s,
+        )
+
+
+@dataclasses.dataclass
+class LayerReady:
+    """A layer-ready notification: layer ``l``'s payload landed at ``t_ready_s``."""
+
+    layer: int
+    t_ready_s: float
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowRequest:
+    """One layerwise retrieval competing for shared bandwidth (§3.6).
+
+    ``bytes_per_layer`` is s_i; ``layer_compute_s`` is c_i.  Both are
+    approximately constant across layers because every layer has the same KV
+    head count and block structure (paper footnote 1).
+    """
+
+    req_id: str
+    bytes_per_layer: float  # s_i
+    layer_compute_s: float  # c_i
+    num_layers: int
+
+    @property
+    def zero_stall_rate(self) -> float:
+        """r_i* = s_i / c_i — bandwidth beyond this yields no TTFT benefit."""
+        return self.bytes_per_layer / self.layer_compute_s
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes_per_layer * self.num_layers

@@ -1,0 +1,5 @@
+from .sharding import (batch_pspec, cache_shardings, data_axes,
+                       logical_pspec, param_shardings, pspec_to_sharding)
+
+__all__ = ["batch_pspec", "cache_shardings", "data_axes", "logical_pspec",
+           "param_shardings", "pspec_to_sharding"]

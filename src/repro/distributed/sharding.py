@@ -1,0 +1,141 @@
+"""Logical sharding rules with divisibility fallback.
+
+One rule set must serve ten architectures whose head counts (1..48) and odd
+vocabularies do not all divide a fixed 16-way 'model' axis, so every rule is
+applied *only if the dim divides the axis product* — otherwise that dim stays
+replicated (the MaxText convention).  The dims that carry the big bytes
+(d_ff, fused H*dh projections, vocab-padded embeddings, expert count 128) are
+all divisible by 16 for every assigned arch, so fallbacks only ever hit small
+tensors.
+
+Scheme (GSPMD propagates everything not pinned here):
+  *  TP  over 'model' : projection output fused dims, expert axis (EP), vocab;
+  * FSDP over 'data'  : the opposite matrix dim of every large param
+                        (ZeRO-3 — parameters and optimizer state sharded);
+  *  DP  over ('pod','data') for batch dims — the pod axis only ever sees
+                        data parallelism + gradient all-reduce (DCN-friendly);
+  *  decode KV caches : batch over DP, sequence over 'model'
+                        (falls back to sequence over DP x model for B=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes present in this mesh ('pod' first if any)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fallback(shape, spec, mesh) -> P:
+    """Drop any rule a dim cannot honour (non-divisible -> replicated)."""
+    fixed = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0 and dim > 0:
+            fixed.append(axis)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+def logical_pspec(shape, logical: tuple, mesh: Mesh) -> P:
+    """Right-align ``logical`` axes onto ``shape`` (leading stack dims get
+    None) and apply divisibility fallback."""
+    pad = len(shape) - len(logical)
+    return _fallback(shape, (None,) * pad + tuple(logical), mesh)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+_TP, _FSDP = "model", "data"
+
+def _param_rule(path: tuple[str, ...], ndim_tail: int) -> tuple:
+    """Logical spec for the TRAILING dims of a param, keyed by its path."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    col = (_FSDP, _TP)       # column-parallel: [d_in, d_out] out over model
+    row = (_TP, _FSDP)       # row-parallel:    [d_in, d_out] in  over model
+    if name == "w":
+        if parent in ("wq", "wk", "wv", "wi_gate", "wi_up", "wi", "in_proj",
+                      "frontend"):
+            return col
+        if parent in ("wo", "out_proj"):
+            return row
+        return (None, None)
+    if name in ("wi_gate", "wi_up"):   # raw expert stacks [E, d, f]
+        return (_TP, _FSDP, None)
+    if name == "wo":                   # expert stack [E, f, d]
+        return (_TP, None, _FSDP)
+    if name in ("table", "unembed"):   # [V_pad, d]
+        return (_TP, _FSDP)
+    if name == "router":               # [d, E] — small, fp32
+        return (None, None)
+    if name == "conv_w":               # [k, C]
+        return (None, _TP)
+    return tuple([None] * ndim_tail)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def spec_for(path, leaf) -> NamedSharding:
+        keys = tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                     for k in path)
+        rule = _param_rule(keys, leaf.ndim)
+        return NamedSharding(mesh, logical_pspec(leaf.shape, rule, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+def batch_pspec(shape, mesh: Mesh) -> P:
+    """Leading dim over DP axes, rest replicated (token/label/embeds)."""
+    dp = data_axes(mesh)
+    return _fallback(shape, (dp,), mesh)
+
+
+def _cache_rule(path: tuple[str, ...], shape, mesh: Mesh) -> P:
+    """KV caches [L, 2, B, S, KV, dh]: B over DP, S over 'model'; if B cannot
+    shard (long_500k B=1), S takes DP x model.  SSM states: B over DP, the
+    head/state dim over 'model'."""
+    dp = data_axes(mesh)
+    name = path[-1] if path else ""
+    if name == "conv":  # [..., B, k-1, C] (right-aligned: stack dims vary)
+        return logical_pspec(shape, (dp, None, _TP), mesh)
+    if name == "ssm":  # [..., B, nh, ds, hd]
+        return logical_pspec(shape, (dp, _TP, None, None), mesh)
+    if len(shape) == 6:  # attention cache [L, 2, B, S, KV, dh]
+        B, S = shape[2], shape[3]
+        if B % _axis_size(mesh, dp) == 0 and B > 1:
+            return _fallback(shape, (None, None, dp, _TP, None, None), mesh)
+        seq_axes = dp + (_TP,)
+        return _fallback(shape, (None, None, None, seq_axes, None, None), mesh)
+    return P()
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    def spec_for(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                     for k in path)
+        return NamedSharding(mesh, _cache_rule(keys, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def pspec_to_sharding(tree_of_pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,104 @@
+"""Pallas TPU decode attention: one query token per sequence against a long
+KV cache — the memory-bound hot spot of the decode_32k / long_500k shapes.
+
+Tiling: grid (B, S/bs) with the cache-scan axis sequential; all H query heads
+are processed together per batch row (q is tiny: [H, dh]), so each grid step
+streams one [bs, KV, dh] cache tile from HBM through VMEM exactly once —
+arithmetic intensity is what the roofline says it is (~2 flops/byte), and the
+kernel's job is to never touch a cache byte twice.  ``lengths`` masks the
+valid prefix (pos+1), so one compiled kernel serves every fill level.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            sm_scale: float, block_s: int, num_s: int, group: int):
+    b = pl.program_id(0)
+    js = pl.program_id(1)
+
+    @pl.when(js == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    s_start = js * block_s
+
+    @pl.when(s_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [H, dh]
+        k = k_ref[0].astype(jnp.float32)  # [bs, KV, dh]
+        v = v_ref[0].astype(jnp.float32)
+        H = q.shape[0]
+        KV = k.shape[1]
+        # logits[h, s] = q[h] . k[s, h // group]
+        qg = q.reshape(KV, group, -1)
+        s = jnp.einsum("khd,skd->khs", qg, k) * sm_scale  # [KV, group, bs]
+        s = s.reshape(H, -1)
+        cols = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        pg = p.reshape(KV, group, -1)
+        o = jnp.einsum("khs,skd->khd", pg, v).reshape(p.shape[0], -1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + o
+        m_scr[...] = m_new
+
+    @pl.when(js == num_s - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, dh]; caches: [B, S, KV, dh]; lengths: [B] -> [B, H, dh]."""
+    B, H, dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    assert H % KV == 0 and S % block_s == 0
+    group = H // KV
+    num_s = S // block_s
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_kernel, sm_scale=sm_scale, block_s=block_s,
+                               num_s=num_s, group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # lengths land in SMEM before the grid runs
+        grid=(B, num_s),
+        in_specs=[
+            pl.BlockSpec((1, H, dh), lambda b, js, len_ref: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, KV, dh),
+                         lambda b, js, len_ref: (b, js, 0, 0)),
+            pl.BlockSpec((1, block_s, KV, dh),
+                         lambda b, js, len_ref: (b, js, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, dh), lambda b, js, len_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

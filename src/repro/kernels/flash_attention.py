@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (causal / full, GQA), the prefill hot spot.
+
+Tiling: grid (B, H, Sq/bq, Sk/bk); the last axis is sequential ("arbitrary")
+so the online-softmax running state (m, l, acc) lives in VMEM scratch across
+kv blocks.  Block sizes default to 128 — MXU-aligned (128x128 systolic) and
+small enough that q/k/v/acc tiles fit VMEM:
+    bq*dh + 2*bk*dh + bq*bk + bq*dh(acc)  ~  128*128*4 floats * few  « 16 MiB.
+GQA is folded into the k/v index_map (head h reads kv head h // (H//KV)), so
+no repeated-KV materialisation ever hits HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, sm_scale: float, block_q: int, block_k: int,
+            num_kq: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Causal: skip kv blocks strictly above the diagonal.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale  # [bq, bk]
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (m == -inf)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == num_kq - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, Sq, dh]; k/v: [B, KV, Sk, dh] -> [B, H, Sq, dh]."""
+    B, H, Sq, dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0 and Sq % block_q == 0 and Sk % block_k == 0
+    group = H // KV
+    nq, nk = Sq // block_q, Sk // block_k
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(_kernel, causal=causal, sm_scale=sm_scale,
+                               block_q=block_q, block_k=block_k, num_kq=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python per grid step, which validates the tiling and semantics;
+on TPU backends they compile to Mosaic.  ``interpret`` is resolved once per
+call site from the default backend unless overridden.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .kv_gather import kv_gather as _gather
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, block_q: int = 128,
+                       block_k: int = 128, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_op(q, k_cache, v_cache, lengths, *, block_s: int = 512,
+                        interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _decode(q, k_cache, v_cache, lengths, block_s=block_s,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_gather_op(pool, indices, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gather(pool, indices, interpret=interpret)

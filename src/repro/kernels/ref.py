@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: [B, H, Sq, dh]; k/v: [B, KV, Sk, dh] (GQA: H % KV == 0)."""
+    B, H, Sq, dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def ref_decode_attention(q, k_cache, v_cache, lengths) -> jnp.ndarray:
+    """q: [B, H, dh]; caches: [B, S, KV, dh]; lengths: [B] valid entries."""
+    B, H, dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k_cache, rep, axis=2)  # [B, S, H, dh]
+    v = jnp.repeat(v_cache, rep, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # [B, S]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs.astype(v.dtype), v.astype(q.dtype))
+
+
+def ref_kv_gather(pool, indices) -> jnp.ndarray:
+    """pool: [P, G, W]; indices: [N] -> out [N, G, W].
+
+    The ObjectCache server-side aggregation readout: layer-l slices of N
+    matched chunks, concatenated in prefix order (Table A3) — on device the
+    pool is the paged HBM chunk arena and this is the layer-major assembly."""
+    return pool[indices]

@@ -1,0 +1,21 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run process pins the device count before any
+jax initialisation)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 4, *, pod: int = 0):
+    """Small in-process mesh for tests (requires enough host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

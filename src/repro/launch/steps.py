@@ -1,0 +1,82 @@
+"""Step builders for the dry-run and launchers: per (config, shape, mesh),
+produce (step_fn, abstract_args, in_shardings, donate_argnums)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import input_specs
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import (batch_pspec, cache_shardings,
+                                        param_shardings)
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _batch_shardings(batch: dict, mesh) -> dict:
+    return {k: NamedSharding(mesh, batch_pspec(v.shape, mesh))
+            for k, v in batch.items()}
+
+
+def make_step(cfg, shape_name: str, mesh, *, moe_train_dispatch: str = "ragged",
+              remat: bool = True, opt_cfg: AdamWConfig | None = None):
+    """Build the lowered-unit for one dry-run cell.
+
+    train_4k   -> train_step(params, opt_state, batch)
+    prefill_32k-> prefill_step(params, batch)
+    decode_*   -> serve_step(params, cache, token, pos)
+    """
+    model = build_model(cfg)
+    kind = SHAPES[shape_name].kind
+    specs = input_specs(cfg, shape_name)
+    params_spec = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    param_sh = param_shardings(params_spec, mesh)
+
+    if kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig(
+            moment_dtype="bfloat16" if cfg.param_count() > 1e11 else "float32")
+        opt_spec = jax.eval_shape(lambda: adamw_init(params_spec, opt_cfg))
+        opt_sh = jax.tree.map(
+            lambda s, _: s,
+            {"m": param_sh, "v": param_sh,
+             "step": NamedSharding(mesh, P())},
+            opt_spec)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                if cfg.family == "moe":
+                    from repro.models import moe as moe_mod
+                    return moe_mod.loss(p, cfg, batch, remat=remat,
+                                        dispatch=moe_train_dispatch)
+                return model.loss(p, batch, remat=remat)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, metrics = adamw_update(grads, opt_state,
+                                                      params, opt_cfg)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        args = (params_spec, opt_spec, specs)
+        in_sh = (param_sh, opt_sh, _batch_shardings(specs, mesh))
+        return train_step, args, in_sh, (0, 1)
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+        return (prefill_step, (params_spec, specs),
+                (param_sh, _batch_shardings(specs, mesh)), ())
+
+    # decode
+    cache_spec = specs["cache"]
+    cache_sh = cache_shardings(cache_spec, mesh)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    tok_sh = NamedSharding(mesh, batch_pspec(specs["token"].shape, mesh))
+    pos_sh = NamedSharding(mesh, batch_pspec(specs["pos"].shape, mesh))
+    return (serve_step,
+            (params_spec, cache_spec, specs["token"], specs["pos"]),
+            (param_sh, cache_sh, tok_sh, pos_sh), (1,))

@@ -1,0 +1,71 @@
+"""Training launcher.
+
+Runs real steps on whatever devices exist (CPU here; the production mesh on a
+pod), with the full fault-tolerance stack: sharded+async checkpoints, NaN
+rollback, failure restart, step-indexed data replay, optional compressed
+pod-axis gradient reduction.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_model
+from repro.training import (AdamWConfig, SyntheticLM, TrainSupervisor,
+                            adamw_init, make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--pod-reduce", default="none",
+                    choices=["none", "fp32", "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_params = sum(np.prod(x.shape) for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M devices={jax.device_count()}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10),
+                          total_steps=args.steps)
+    opt_state = adamw_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, remat=args.remat,
+                                      microbatches=args.microbatches,
+                                      pod_reduce=args.pod_reduce))
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
+    sup = TrainSupervisor(step_fn, params, opt_state, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every)
+
+    t0 = time.time()
+    stats = sup.run(data.batch_at, args.steps)
+    dt = time.time() - t0
+    tokens = args.steps * args.batch * args.seq
+    print(f"done: steps={stats.steps_done} loss {stats.losses[0]:.3f} -> "
+          f"{np.mean(stats.losses[-5:]):.3f} | {tokens/dt:.0f} tok/s | "
+          f"rollbacks={stats.rollbacks} restarts={stats.restarts} "
+          f"stragglers={stats.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Unified model interface.
+
+Every family exposes the same four entry points via :class:`Model`:
+
+    loss(params, batch)                     -> scalar      (train_4k)
+    prefill(params, batch, prefix, plen)    -> (logits, cache)   (prefill_32k)
+    decode_step(params, cache, token, pos)  -> (logits, cache)   (decode_* / long_*)
+    init_params / init_cache / cache_spec
+
+``batch`` is a dict: always ``tokens``/``labels``; ``embeds`` for the stubbed
+VLM/audio frontends.  ``cache_spec`` returns ShapeDtypeStructs so the dry-run
+can lower ``serve_step`` without allocating terabyte caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import dense, encdec, hybrid, moe, ssm
+from . import layers as nn
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ----------------------------------------------------------------
+    def init_params(self, key):
+        return _MODULES[self._mod].init_params(key, self.cfg)
+
+    @property
+    def _mod(self) -> str:
+        fam = self.cfg.family
+        return {"dense": "dense", "vlm": "dense", "moe": "moe", "ssm": "ssm",
+                "hybrid": "hybrid", "encdec": "encdec"}[fam]
+
+    # -- training --------------------------------------------------------------
+    def loss(self, params, batch, *, remat: bool = False):
+        m = _MODULES[self._mod]
+        if self.cfg.family == "moe":
+            return m.loss(params, self.cfg, batch, remat=remat,
+                          dispatch=self.cfg_dispatch())
+        return m.loss(params, self.cfg, batch, remat=remat)
+
+    def cfg_dispatch(self) -> str:
+        return getattr(self.cfg, "moe_dispatch", "ragged")
+
+    # -- serving ----------------------------------------------------------------
+    def prefill(self, params, batch, prefix=None, prefix_len: int = 0):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.prefill(params, cfg, batch["tokens"], batch["embeds"],
+                                  prefix, prefix_len)
+        if cfg.family == "ssm":
+            return ssm.prefill(params, cfg, batch["tokens"], prefix, prefix_len)
+        if cfg.family == "hybrid":
+            return hybrid.prefill(params, cfg, batch["tokens"], prefix, prefix_len)
+        if cfg.family == "moe":
+            return moe.prefill(params, cfg, batch["tokens"], prefix, prefix_len)
+        return dense.prefill(params, cfg, batch["tokens"], prefix, prefix_len,
+                             embeds=batch.get("embeds"))
+
+    def decode_step(self, params, cache, token, pos):
+        return _MODULES[self._mod].decode_step(params, self.cfg, cache, token, pos)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return _MODULES[self._mod].init_cache(self.cfg, batch, seq_len)
+
+    def cache_spec(self, batch: int, seq_len: int):
+        zeros = jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+        return zeros
+
+    # -- introspection ------------------------------------------------------------
+    def param_count(self) -> int:
+        return self.cfg.param_count()
+
+
+_MODULES = {"dense": dense, "moe": moe, "ssm": ssm, "hybrid": hybrid,
+            "encdec": encdec}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,176 @@
+"""Whisper-style encoder-decoder.
+
+The conv/mel frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed frame embeddings [B, S_audio, d] (one linear projection stands in
+for the post-conv feature map).  Sinusoidal absolute positions, bidirectional
+encoder, causal decoder with cross-attention; plain-GELU MLPs; MHA (kv == H).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as nn
+from .config import ModelConfig
+from .scan_util import layer_scan
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    half = channels // 2
+    scale = math.log(10000.0) / max(half - 1, 1)
+    inv = jnp.exp(-scale * jnp.arange(half, dtype=jnp.float32))
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_enc_layer(key, cfg):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": nn.init_layernorm(cfg.d_model, nn.pdt(cfg)),
+        "attn": nn.init_attention(ka, cfg),
+        "ln2": nn.init_layernorm(cfg.d_model, nn.pdt(cfg)),
+        "mlp": nn.init_mlp(km, cfg, kind="gelu"),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": nn.init_layernorm(cfg.d_model, nn.pdt(cfg)),
+        "self_attn": nn.init_attention(ka, cfg),
+        "ln_cross": nn.init_layernorm(cfg.d_model, nn.pdt(cfg)),
+        "cross_attn": nn.init_attention(kc, cfg),
+        "ln2": nn.init_layernorm(cfg.d_model, nn.pdt(cfg)),
+        "mlp": nn.init_mlp(km, cfg, kind="gelu"),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kf, kenc, kdec = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.num_layers)
+    return {
+        "embed": nn.init_embedding(ke, cfg),
+        "frontend": nn.init_linear(kf, cfg.d_model, cfg.d_model, nn.pdt(cfg)),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": nn.init_layernorm(cfg.d_model, nn.pdt(cfg)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": nn.init_layernorm(cfg.d_model, nn.pdt(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder stacks
+# ---------------------------------------------------------------------------
+def encode(params, cfg: ModelConfig, audio_embeds):
+    """audio_embeds: [B, S_a, d] (stub frontend features)."""
+    x = nn.linear(params["frontend"], audio_embeds.astype(nn.dt(cfg)))
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, p):
+        a, _ = nn.attention(p["attn"], cfg, nn.layernorm(p["ln1"], h),
+                            positions=positions, causal=False, use_rope=False)
+        h = h + a
+        h = h + nn.mlp(p["mlp"], nn.layernorm(p["ln2"], h), "gelu")
+        return h, None
+
+    x, _ = layer_scan(body, x, params["enc_layers"])
+    return nn.layernorm(params["enc_norm"], x)
+
+
+def _dec_block(p, cfg, x, enc_out, positions, prefix_kv=None):
+    a, seg = nn.attention(p["self_attn"], cfg, nn.layernorm(p["ln1"], x),
+                          positions=positions, causal=True,
+                          prefix_kv=prefix_kv, use_rope=False)
+    x = x + a
+    c, cross_kv = nn.attention(p["cross_attn"], cfg,
+                               nn.layernorm(p["ln_cross"], x),
+                               positions=positions, causal=False,
+                               kv_x=enc_out, use_rope=False)
+    x = x + c
+    x = x + nn.mlp(p["mlp"], nn.layernorm(p["ln2"], x), "gelu")
+    return x, seg, cross_kv
+
+
+def decode_stack(params, cfg: ModelConfig, tokens, enc_out, prefix_kv=None,
+                 prefix_len: int = 0, collect_kv: bool = False):
+    x = nn.embed(params["embed"], cfg, tokens)
+    S = x.shape[1]
+    x = x + sinusoids(prefix_len + S, cfg.d_model).astype(x.dtype)[None, prefix_len:]
+    positions = prefix_len + jnp.arange(S)[None, :]
+
+    def body(h, xs):
+        p, pkv = xs
+        h, seg, cross = _dec_block(p, cfg, h, enc_out, positions,
+                                   None if pkv is None else (pkv[0], pkv[1]))
+        out = (jnp.stack(seg), jnp.stack(cross)) if collect_kv else None
+        return h, out
+
+    x, kv = layer_scan(body, x, (params["dec_layers"], prefix_kv))
+    x = nn.layernorm(params["final_norm"], x)
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+def loss(params, cfg: ModelConfig, batch, *, remat: bool = False):
+    enc_out = encode(params, cfg, batch["embeds"])
+    x, _ = decode_stack(params, cfg, batch["tokens"], enc_out)
+    lg = nn.logits(params["embed"], cfg, x)
+    return nn.cross_entropy(lg, batch["labels"], batch.get("loss_mask"))
+
+
+def prefill(params, cfg: ModelConfig, tokens, audio_embeds, prefix_kv=None,
+            prefix_len: int = 0):
+    """Returns (last logits, cache = {self: [L,2,B,S,KV,dh], cross: [...]})."""
+    enc_out = encode(params, cfg, audio_embeds)
+    x, kv = decode_stack(params, cfg, tokens, enc_out, prefix_kv, prefix_len,
+                         collect_kv=True)
+    seg_kv, cross_kv = kv
+    if prefix_kv is not None:
+        seg_kv = jnp.concatenate([prefix_kv.astype(seg_kv.dtype), seg_kv], axis=3)
+    lg = nn.logits(params["embed"], cfg, x[:, -1:, :])[:, 0, :]
+    return lg, {"self": seg_kv, "cross": cross_kv}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    """token: [B,1]; cache = {self, cross}; pos: [B]."""
+    x = nn.embed(params["embed"], cfg, token)
+    pos_emb = sinusoids(cache["self"].shape[3] + 1, cfg.d_model)
+    x = x + pos_emb[pos][:, None, :].astype(x.dtype)
+
+    def body(h, xs):
+        p, kv, cross = xs
+        a, (k_c, v_c) = nn.decode_attention(
+            p["self_attn"], cfg, nn.layernorm(p["ln1"], h), kv[0], kv[1], pos,
+            use_rope=False)
+        h = h + a
+        c, _ = nn.decode_attention(p["cross_attn"], cfg,
+                                   nn.layernorm(p["ln_cross"], h),
+                                   cross[0], cross[1], pos, cross=True)
+        h = h + c
+        h = h + nn.mlp(p["mlp"], nn.layernorm(p["ln2"], h), "gelu")
+        return h, jnp.stack([k_c, v_c])
+
+    x, new_self = layer_scan(body, x,
+                               (params["dec_layers"], cache["self"], cache["cross"]))
+    x = nn.layernorm(params["final_norm"], x)
+    lg = nn.logits(params["embed"], cfg, x)[:, 0, :]
+    return lg, {"self": new_self, "cross": cache["cross"]}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               cross_len: Optional[int] = None):
+    shape = (cfg.num_layers, 2, batch, seq_len, cfg.num_kv_heads, cfg.head_dim)
+    cross = (cfg.num_layers, 2, batch, cross_len or cfg.cross_kv_len,
+             cfg.num_kv_heads, cfg.head_dim)
+    return {"self": jnp.zeros(shape, nn.dt(cfg)),
+            "cross": jnp.zeros(cross, nn.dt(cfg))}

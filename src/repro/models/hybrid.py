@@ -1,0 +1,157 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE weight-shared attention+MLP
+block applied every ``shared_attn_every`` Mamba layers.
+
+Layout for L total Mamba layers with stride k (config guarantees
+(L - lead) % k == 0, lead = (L % k) leading Mamba layers):
+
+    [mamba x lead]  then  groups of { shared_attn_block ; mamba x k }
+
+The shared block's *weights* are reused at every application, but each
+application keeps its own KV cache (weights shared, state not).
+Simplification vs the released Zamba2 (documented in DESIGN.md): we omit the
+per-application LoRA specialisation and the concat-with-embedding input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import dense
+from . import layers as nn
+from . import ssm
+from .config import ModelConfig
+from .scan_util import layer_scan
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int]:
+    k = cfg.shared_attn_every
+    lead = cfg.num_layers % k
+    groups = cfg.num_layers // k
+    return lead, groups
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kl, ks = jax.random.split(key, 3)
+    lead, groups = _layout(cfg)
+    keys = jax.random.split(kl, cfg.num_layers)
+    mamba = jax.vmap(lambda k_: ssm.init_ssm_layer(k_, cfg))(keys)
+    lead_p = jax.tree.map(lambda a: a[:lead], mamba)
+    group_p = jax.tree.map(
+        lambda a: a[lead:].reshape(groups, cfg.shared_attn_every, *a.shape[1:]),
+        mamba)
+    return {
+        "embed": nn.init_embedding(ke, cfg),
+        "lead": lead_p,
+        "groups": group_p,
+        "shared": dense.init_layer(ks, cfg),  # ONE block, applied `groups` times
+        "final_norm": nn.init_rmsnorm(cfg.d_model, nn.pdt(cfg)),
+    }
+
+
+def _mamba_scan(stacked_p, cfg, x, states=None):
+    def body(h, xs):
+        layer_p, st = xs
+        h, new_st = ssm.ssm_block(layer_p, cfg, h, st)
+        return h, new_st
+    return layer_scan(body, x, (stacked_p, states))
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = False):
+    x = nn.embed(params["embed"], cfg, tokens)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _mamba_scan(params["lead"], cfg, x)
+
+    def group_body(h, group_p):
+        h, _ = dense.block(params["shared"], cfg, h, positions)
+        h, _ = _mamba_scan(group_p, cfg, h)
+        return h, None
+
+    group_body = jax.checkpoint(group_body) if remat else group_body
+    x, _ = layer_scan(group_body, x, params["groups"])
+    return nn.rmsnorm(params["final_norm"], x)
+
+
+def loss(params, cfg: ModelConfig, batch, *, remat: bool = False):
+    x = forward(params, cfg, batch["tokens"], remat=remat)
+    lg = nn.logits(params["embed"], cfg, x)
+    return nn.cross_entropy(lg, batch["labels"], batch.get("loss_mask"))
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_cache=None, prefix_len: int = 0):
+    """Returns (last logits, cache).  Cache pytree:
+       {lead: ssm-states[lead], groups: ssm-states[G,k], attn: [G,2,B,S,KV,dh]}.
+
+    ``prefix_cache``: optional same-structure snapshot (ObjectCache reuse):
+    SSM states replace recomputation; attention KV is injected as prefix.
+    """
+    x = nn.embed(params["embed"], cfg, tokens)
+    S = x.shape[1]
+    positions = prefix_len + jnp.arange(S)[None, :]
+    lead_states_in = None if prefix_cache is None else prefix_cache["lead"]
+    x, lead_states = _mamba_scan(params["lead"], cfg, x, lead_states_in)
+
+    def group_body(h, xs):
+        group_p, group_states, pkv = xs
+        h2, seg = dense.block(params["shared"], cfg, h, positions,
+                              prefix_kv=None if pkv is None else (pkv[0], pkv[1]))
+        h3, new_states = _mamba_scan(group_p, cfg, h2, group_states)
+        return h3, (new_states, jnp.stack(seg))
+
+    g_states = None if prefix_cache is None else prefix_cache["groups"]
+    g_pkv = None if prefix_cache is None else prefix_cache["attn"]
+    x, (group_states, seg_kv) = layer_scan(
+        group_body, x, (params["groups"], g_states, g_pkv))
+    x = nn.rmsnorm(params["final_norm"], x)
+    lg = nn.logits(params["embed"], cfg, x[:, -1:, :])[:, 0, :]
+    if prefix_cache is not None:
+        seg_kv = jnp.concatenate([g_pkv.astype(seg_kv.dtype), seg_kv], axis=3)
+    return lg, {"lead": lead_states, "groups": group_states, "attn": seg_kv}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    x = nn.embed(params["embed"], cfg, token)
+
+    def lead_body(h, xs):
+        layer_p, st = xs
+        h, new_st = ssm.ssm_decode_block(layer_p, cfg, h, st)
+        return h, new_st
+
+    x, lead_states = layer_scan(lead_body, x, (params["lead"], cache["lead"]))
+
+    def inner(h, ys):
+        layer_p, st = ys
+        h, new_st = ssm.ssm_decode_block(layer_p, cfg, h, st)
+        return h, new_st
+
+    def group_body(h, xs):
+        group_p, group_states, kv = xs
+        h, k_c, v_c = dense.decode_block(params["shared"], cfg, h, kv[0], kv[1], pos)
+        h, new_states = layer_scan(inner, h, (group_p, group_states))
+        return h, (new_states, jnp.stack([k_c, v_c]))
+
+    x, (group_states, new_kv) = layer_scan(
+        group_body, x, (params["groups"], cache["groups"], cache["attn"]))
+    x = nn.rmsnorm(params["final_norm"], x)
+    lg = nn.logits(params["embed"], cfg, x)[:, 0, :]
+    return lg, {"lead": lead_states, "groups": group_states, "attn": new_kv}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    lead, groups = _layout(cfg)
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+
+    def ssm_states(n):
+        return {
+            "conv": jnp.zeros((n, batch, cfg.ssm_conv - 1, conv_dim), nn.dt(cfg)),
+            "ssm": jnp.zeros((n, batch, cfg.ssm_heads, cfg.ssm_state,
+                              cfg.ssm_headdim), jnp.float32),
+        }
+
+    g = ssm_states(groups * cfg.shared_attn_every)
+    return {
+        "lead": ssm_states(lead),
+        "groups": jax.tree.map(
+            lambda a: a.reshape(groups, cfg.shared_attn_every, *a.shape[1:]), g),
+        "attn": jnp.zeros((groups, 2, batch, seq_len, cfg.num_kv_heads,
+                           cfg.head_dim), nn.dt(cfg)),
+    }

@@ -1,0 +1,278 @@
+"""Mixture-of-experts decoder (Qwen3-MoE 128e/top-8, Llama4-Maverick
+128e/top-1 + shared expert, alternating dense/MoE layers).
+
+Expert dispatch is the sort-based capacity scheme (dropless up to the
+capacity factor): tokens are argsorted by expert id, ranked within their
+expert's segment, and gathered into dense [E, C, d] buffers so the expert
+FFNs are plain batched matmuls (MXU-friendly).  Under EP (experts sharded
+over the mesh 'model' axis) the gather/scatter lowers to all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import dense
+from . import layers as nn
+from .config import ModelConfig
+from .scan_util import layer_scan
+
+LOAD_BALANCE_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# expert MLP with router
+# ---------------------------------------------------------------------------
+def init_moe_mlp(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    kr, kg, ku, ko, ks = jax.random.split(key, 5)
+    p = {
+        "router": nn._normal(kr, (d, E), d ** -0.5, jnp.float32),
+        "wi_gate": nn._normal(kg, (E, d, f), d ** -0.5, nn.pdt(cfg)),
+        "wi_up": nn._normal(ku, (E, d, f), d ** -0.5, nn.pdt(cfg)),
+        "wo": nn._normal(ko, (E, f, d), f ** -0.5, nn.pdt(cfg)),
+    }
+    if cfg.shared_expert_d_ff:
+        p["shared"] = nn.init_mlp(ks, cfg, d_ff=cfg.shared_expert_d_ff)
+    return p
+
+
+def _route(p, cfg: ModelConfig, xf):
+    """Router: returns (topw [T,k] renormalised, topi [T,k], aux loss)."""
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = xf.shape[0]
+    router_logits = (xf.astype(jnp.float32) @ p["router"])  # [T, E]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)  # [T, k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # load-balance auxiliary loss (Switch style): E * sum_e f_e * P_e
+    ids_1hot = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # [T, k, E]
+    f_e = ids_1hot.sum((0, 1)) / (T * k)
+    P_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * P_e)
+    return topw, topi, aux
+
+
+def _moe_ragged(p, cfg: ModelConfig, xf, topw, topi):
+    """Dropless megablocks-style dispatch via ``lax.ragged_dot``.
+
+    Exactly causal (no capacity drops) — required on the serving path, where
+    prefill(S-1) must equal prefill(S)[:S-1].  FLOPs are exactly the active
+    T*k*d*f work.
+    """
+    T, d = xf.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    flat_e = topi.reshape(T * k)
+    flat_w = topw.reshape(T * k).astype(xf.dtype)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    stok = flat_tok[order]
+    sw = flat_w[order]
+    counts = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    xs = xf[stok]  # [T*k, d] in expert-sorted order
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, p["wi_gate"].astype(xs.dtype), counts)) \
+        * jax.lax.ragged_dot(xs, p["wi_up"].astype(xs.dtype), counts)
+    out = jax.lax.ragged_dot(h, p["wo"].astype(h.dtype), counts)  # [T*k, d]
+    return jnp.zeros((T, d), xf.dtype).at[stok].add(out * sw[:, None])
+
+
+def _moe_capacity(p, cfg: ModelConfig, xf, topw, topi):
+    """Sort-based capacity-C dispatch into dense [E, C, d] buffers.
+
+    GSPMD-friendly (static shapes, einsum experts) and the standard training
+    path; tokens over capacity are dropped, so it is NOT strictly causal
+    across different batch shapes — do not use for serving.
+    """
+    T, d = xf.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = max(1, int(T * k / E * cfg.capacity_factor))  # static capacity
+
+    flat_e = topi.reshape(T * k)
+    flat_w = topw.reshape(T * k).astype(xf.dtype)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stok = flat_tok[order]
+    sw = flat_w[order]
+    counts = jnp.bincount(flat_e, length=E)
+    seg_start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - seg_start[se]  # rank within expert segment
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)  # overflow -> trash slot
+
+    buf_tok = jnp.full((E * C + 1,), T, dtype=jnp.int32).at[slot].set(
+        stok.astype(jnp.int32), mode="drop")[: E * C]
+    buf_w = jnp.zeros((E * C + 1,), xf.dtype).at[slot].set(sw, mode="drop")[: E * C]
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    ein = xpad[buf_tok].reshape(E, C, d)  # expert inputs
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, p["wi_gate"].astype(ein.dtype))) \
+        * jnp.einsum("ecd,edf->ecf", ein, p["wi_up"].astype(ein.dtype))
+    eout = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(h.dtype))
+    eflat = eout.reshape(E * C, d) * buf_w[:, None]
+    return jnp.zeros((T + 1, d), xf.dtype).at[buf_tok].add(eflat)[:T]
+
+
+def moe_mlp(p, cfg: ModelConfig, x, dispatch: str = "ragged"):
+    """x: [B, S, d] -> (y, aux_loss)."""
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    topw, topi, aux = _route(p, cfg, xf)
+    if dispatch == "ragged":
+        y = _moe_ragged(p, cfg, xf, topw, topi)
+    else:
+        y = _moe_capacity(p, cfg, xf, topw, topi)
+    if "shared" in p:
+        y = y + nn.mlp(p["shared"], xf, "swiglu")
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# layers: homogeneous (moe_every == 1) or alternating dense/MoE super-layers
+# ---------------------------------------------------------------------------
+def init_moe_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": nn.init_rmsnorm(cfg.d_model, nn.pdt(cfg)),
+        "attn": nn.init_attention(ka, cfg),
+        "ln2": nn.init_rmsnorm(cfg.d_model, nn.pdt(cfg)),
+        "moe": init_moe_mlp(km, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    if cfg.moe_every == 1:
+        keys = jax.random.split(kl, cfg.num_layers)
+        stacked = jax.vmap(lambda k: init_moe_layer(k, cfg))(keys)
+    else:
+        assert cfg.num_layers % cfg.moe_every == 0
+        n_super = cfg.num_layers // cfg.moe_every
+
+        def init_super(k):
+            kd, km = jax.random.split(k)
+            return {"dense": dense.init_layer(kd, cfg),
+                    "moe": init_moe_layer(km, cfg)}
+        stacked = jax.vmap(init_super)(jax.random.split(kl, n_super))
+    return {"embed": nn.init_embedding(ke, cfg), "layers": stacked,
+            "final_norm": nn.init_rmsnorm(cfg.d_model, nn.pdt(cfg))}
+
+
+def moe_block(p, cfg: ModelConfig, x, positions, prefix_kv=None,
+              dispatch: str = "ragged"):
+    h, seg_kv = nn.attention(p["attn"], cfg, nn.rmsnorm(p["ln1"], x),
+                             positions=positions, causal=True, prefix_kv=prefix_kv)
+    x = x + h
+    y, aux = moe_mlp(p["moe"], cfg, nn.rmsnorm(p["ln2"], x), dispatch)
+    return x + y, seg_kv, aux
+
+
+def moe_decode_block(p, cfg: ModelConfig, x, k_cache, v_cache, pos):
+    h, (k_cache, v_cache) = nn.decode_attention(
+        p["attn"], cfg, nn.rmsnorm(p["ln1"], x), k_cache, v_cache, pos)
+    x = x + h
+    y, _ = moe_mlp(p["moe"], cfg, nn.rmsnorm(p["ln2"], x), "ragged")
+    return x + y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# model fns (mirror dense.py API)
+# ---------------------------------------------------------------------------
+def _scan_layers(params, cfg, x, positions, prefix_kv=None, collect_kv=False,
+                 remat: bool = False, dispatch: str = "ragged"):
+    """Returns (x, seg_kv stacked over *attention* layer index, total aux)."""
+    if cfg.moe_every == 1:
+        def body(carry, xs):
+            h, aux_acc = carry
+            layer_p, pkv = xs
+            h, seg, aux = moe_block(layer_p, cfg, h, positions,
+                                    None if pkv is None else (pkv[0], pkv[1]),
+                                    dispatch)
+            return (h, aux_acc + aux), (jnp.stack(seg) if collect_kv else None)
+        body = jax.checkpoint(body) if remat else body
+        (x, aux), segs = layer_scan(body, (x, 0.0), (params["layers"], prefix_kv))
+        return x, segs, aux
+
+    # alternating dense / MoE super-layers (llama4 style)
+    def body(carry, xs):
+        h, aux_acc = carry
+        layer_p, pkv = xs
+        pk0 = None if pkv is None else (pkv[0][0], pkv[0][1])
+        pk1 = None if pkv is None else (pkv[1][0], pkv[1][1])
+        h, seg_d = dense.block(layer_p["dense"], cfg, h, positions, pk0)
+        h, seg_m, aux = moe_block(layer_p["moe"], cfg, h, positions, pk1,
+                                  dispatch)
+        segs = jnp.stack([jnp.stack(seg_d), jnp.stack(seg_m)]) if collect_kv else None
+        return (h, aux_acc + aux), segs
+
+    body = jax.checkpoint(body) if remat else body
+    pkv_grouped = None
+    if prefix_kv is not None:
+        L = cfg.num_layers
+        pkv_grouped = prefix_kv.reshape(
+            L // cfg.moe_every, cfg.moe_every, *prefix_kv.shape[1:])
+    (x, aux), segs = layer_scan(body, (x, 0.0), (params["layers"], pkv_grouped))
+    if collect_kv and segs is not None:
+        segs = segs.reshape(cfg.num_layers, *segs.shape[2:])
+    return x, segs, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = False,
+            dispatch: str = "ragged"):
+    x = nn.embed(params["embed"], cfg, tokens)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _, aux = _scan_layers(params, cfg, x, positions, remat=remat,
+                             dispatch=dispatch)
+    return nn.rmsnorm(params["final_norm"], x), aux
+
+
+def loss(params, cfg: ModelConfig, batch, *, remat: bool = False,
+         dispatch: str = "ragged"):
+    x, aux = forward(params, cfg, batch["tokens"], remat=remat,
+                     dispatch=dispatch)
+    lg = nn.logits(params["embed"], cfg, x)
+    ce = nn.cross_entropy(lg, batch["labels"], batch.get("loss_mask"))
+    return ce + LOAD_BALANCE_COEF * aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_kv=None, prefix_len: int = 0):
+    x = nn.embed(params["embed"], cfg, tokens)
+    positions = prefix_len + jnp.arange(x.shape[1])[None, :]
+    x, seg_kv, _ = _scan_layers(params, cfg, x, positions, prefix_kv,
+                                collect_kv=True)
+    x = nn.rmsnorm(params["final_norm"], x)
+    lg = nn.logits(params["embed"], cfg, x[:, -1:, :])[:, 0, :]
+    if prefix_kv is not None:
+        seg_kv = jnp.concatenate([prefix_kv.astype(seg_kv.dtype), seg_kv], axis=3)
+    return lg, seg_kv
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    x = nn.embed(params["embed"], cfg, token)
+    if cfg.moe_every == 1:
+        def body(h, xs):
+            layer_p, kv = xs
+            h, k_c, v_c = moe_decode_block(layer_p, cfg, h, kv[0], kv[1], pos)
+            return h, jnp.stack([k_c, v_c])
+        x, new_cache = layer_scan(body, x, (params["layers"], cache))
+    else:
+        n_super = cfg.num_layers // cfg.moe_every
+        grouped = cache.reshape(n_super, cfg.moe_every, *cache.shape[1:])
+
+        def body(h, xs):
+            layer_p, kvg = xs
+            h, kd, vd = dense.decode_block(layer_p["dense"], cfg, h,
+                                           kvg[0][0], kvg[0][1], pos)
+            h, km, vm = moe_decode_block(layer_p["moe"], cfg, h,
+                                         kvg[1][0], kvg[1][1], pos)
+            return h, jnp.stack([jnp.stack([kd, vd]), jnp.stack([km, vm])])
+        x, new_grouped = layer_scan(body, x, (params["layers"], grouped))
+        new_cache = new_grouped.reshape(cfg.num_layers, *cache.shape[1:])
+    x = nn.rmsnorm(params["final_norm"], x)
+    lg = nn.logits(params["embed"], cfg, x)[:, 0, :]
+    return lg, new_cache
+
+
+init_cache = dense.init_cache

@@ -1,0 +1,19 @@
+"""Layer-scan indirection.
+
+All models scan stacked layer parameters with ``layer_scan``.  The default is
+``lax.scan`` (one layer's HLO — fast compiles, production choice).  The
+dry-run's cost pass sets ``FULL_UNROLL = True`` before lowering because XLA's
+``cost_analysis`` counts a while-loop body ONCE regardless of trip count —
+unrolled lowering is the only way to get true per-step FLOPs/bytes/collective
+counts out of the compiled module (verified in tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import jax
+
+FULL_UNROLL = False
+
+
+def layer_scan(body, init, xs, length=None):
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if FULL_UNROLL else 1)

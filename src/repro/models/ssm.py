@@ -1,0 +1,266 @@
+"""Mamba2 (SSD — state-space duality) language model.
+
+TPU adaptation: prefill/training uses the *chunked* SSD algorithm — all
+intra-chunk work is dense matmuls over [chunk x chunk] and [chunk x state]
+tiles (MXU-friendly, chunk default 128), with a tiny ``lax.scan`` carrying the
+[heads, state, headdim] recurrent state across chunks.  Decode uses the O(1)
+recurrent form.
+
+The reusable "prefix state" for ObjectCache is the fixed-size
+(conv_state, ssm_state) snapshot at a chunk boundary — see
+DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as nn
+from .config import ModelConfig
+from .scan_util import layer_scan
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_ssm_layer(key, cfg: ModelConfig):
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_dim = di + 2 * ds
+    # dt bias: softplus^-1 of dt in [1e-3, 0.1]
+    dt = jnp.exp(jax.random.uniform(k3, (nh,), jnp.float32) *
+                 (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "ln": nn.init_rmsnorm(d, nn.pdt(cfg)),
+        "in_proj": nn.init_linear(k1, d, 2 * di + 2 * ds + nh, nn.pdt(cfg)),
+        "conv_w": nn._normal(k2, (cfg.ssm_conv, conv_dim), conv_dim ** -0.5,
+                             nn.pdt(cfg)),
+        "conv_b": jnp.zeros((conv_dim,), nn.pdt(cfg)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": nn.init_rmsnorm(di, nn.pdt(cfg)),
+        "out_proj": nn.init_linear(k4, di, d, nn.pdt(cfg), scale=di ** -0.5),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    keys = jax.random.split(kl, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_ssm_layer(k, cfg))(keys)
+    return {"embed": nn.init_embedding(ke, cfg), "layers": stacked,
+            "final_norm": nn.init_rmsnorm(cfg.d_model, nn.pdt(cfg))}
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def _segsum(dA):
+    """dA: [..., q] -> lower-triangular segment sums S[i,j] = sum_{k=j+1..i} dA_k."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    S = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, S, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked state-space-duality scan.
+
+    x:  [b, s, h, p]   inputs per head
+    dt: [b, s, h]      softplus'd timestep
+    A:  [h]            negative per-head decay
+    Bm: [b, s, n]      input projection (shared across heads, n_groups=1)
+    Cm: [b, s, n]      output projection
+    h0: optional initial state [b, h, n, p]
+    Returns (y [b, s, h, p], final_state [b, h, n, p]).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]  # [b,nc,q,h]
+    dA_cs = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+
+    # -- intra-chunk (quadratic within the chunk, batched matmuls) -----------
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))  # [b,nc,h,q,q]
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # [b,nc,q,q]
+    M = CB[:, :, None] * L * jnp.moveaxis(dtc, -1, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, xc)
+
+    # -- chunk states ----------------------------------------------------------
+    suffix = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # decay from t to chunk end
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, dtc * suffix, xc)
+
+    # -- inter-chunk recurrence -------------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # [b,nc,h]
+    init = jnp.zeros((b, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def scan_fn(carry, xs):
+        decay_c, state_c = xs  # [b,h], [b,h,n,p]
+        new = decay_c[..., None, None] * carry + state_c
+        return new, carry  # emit state *entering* this chunk
+
+    # NOTE: plain lax.scan on purpose — the carry update is elementwise
+    # (negligible FLOPs), and unrolling S/chunk copies of it would explode
+    # the cost-pass HLO (layer_scan unrolls only true layer stacks).
+    final, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [b,nc,h,n,p]
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", Cc, h_prev) * \
+        jnp.exp(dA_cs)[..., None].transpose(0, 1, 2, 3, 4)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_recurrent_step(x, dt, A, Bm, Cm, h):
+    """One decode step.  x: [b,h,p], dt: [b,h], Bm/Cm: [b,n], h: [b,h,n,p]."""
+    dA = jnp.exp(dt * A[None, :])  # [b,h]
+    upd = dt[..., None, None] * Bm[:, None, :, None] * x[:, :, None, :]
+    h = dA[..., None, None] * h + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, conv_state=None):
+    """Depthwise causal conv over time.  xBC: [B,S,C]; w: [k,C].
+
+    ``conv_state``: optional [B, k-1, C] history (decode/prefill continuation).
+    Returns (out [B,S,C], new_state [B,k-1,C]).
+    """
+    k = w.shape[0]
+    B, S, C = xBC.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, k - 1, C), xBC.dtype)
+    ext = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    out = sum(ext[:, i:i + S, :] * w[i].astype(xBC.dtype) for i in range(k))
+    out = out + b.astype(xBC.dtype)
+    new_state = ext[:, -(k - 1):, :] if k > 1 else conv_state
+    return jax.nn.silu(out), new_state
+
+
+def ssm_block(p, cfg: ModelConfig, x, state=None):
+    """Mamba2 block.  state: optional dict(conv [B,k-1,C], ssm [B,h,n,p]).
+    Returns (y, new_state)."""
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    B, S, _ = x.shape
+    h = nn.rmsnorm(p["ln"], x)
+    z, xBC, dt = _split_proj(cfg, nn.linear(p["in_proj"], h))
+    conv_in = None if state is None else state["conv"]
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + ds], axis=-1)
+    xs = xs.reshape(B, S, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h0 = None if state is None else state["ssm"]
+    y, ssm_state = ssd_chunked(xs, dt, A, Bm, Cm, min(cfg.ssm_chunk, S), h0=h0)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B, S, di)
+    y = nn.rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    out = nn.linear(p["out_proj"], y)
+    return x + out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def ssm_decode_block(p, cfg: ModelConfig, x, state):
+    """One-token Mamba2 step.  x: [B,1,d]."""
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    B = x.shape[0]
+    h = nn.rmsnorm(p["ln"], x)
+    z, xBC, dt = _split_proj(cfg, nn.linear(p["in_proj"], h))
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], state["conv"])
+    xs, Bm, Cm = jnp.split(xBC[:, 0], [di, di + ds], axis=-1)
+    xs = xs.reshape(B, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_recurrent_step(xs, dt, A, Bm.astype(jnp.float32),
+                                      Cm.astype(jnp.float32),
+                                      state["ssm"].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = nn.rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    return x + nn.linear(p["out_proj"], y), {"conv": conv_state, "ssm": ssm_state}
+
+
+# ---------------------------------------------------------------------------
+# model fns
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = False):
+    x = nn.embed(params["embed"], cfg, tokens)
+
+    def body(h, layer_p):
+        h, _ = ssm_block(layer_p, cfg, h)
+        return h, None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = layer_scan(body, x, params["layers"])
+    return nn.rmsnorm(params["final_norm"], x)
+
+
+def loss(params, cfg: ModelConfig, batch, *, remat: bool = False):
+    x = forward(params, cfg, batch["tokens"], remat=remat)
+    lg = nn.logits(params["embed"], cfg, x)
+    return nn.cross_entropy(lg, batch["labels"], batch.get("loss_mask"))
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_state=None, prefix_len: int = 0):
+    """Returns (last logits, per-layer state pytree stacked over L).
+
+    ``prefix_state``: optional ObjectCache state snapshot
+    {conv: [L,B,k-1,C], ssm: [L,B,h,n,p]} — replaces prefix recomputation
+    entirely (the SSM analogue of prefix-KV reuse)."""
+    x = nn.embed(params["embed"], cfg, tokens)
+
+    def body(h, xs):
+        layer_p, st = xs
+        h, new_st = ssm_block(layer_p, cfg, h, st)
+        return h, new_st
+
+    x, states = layer_scan(body, x, (params["layers"], prefix_state))
+    x = nn.rmsnorm(params["final_norm"], x)
+    lg = nn.logits(params["embed"], cfg, x[:, -1:, :])[:, 0, :]
+    return lg, states
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    """pos is unused (state is positionless) but kept for API uniformity."""
+    x = nn.embed(params["embed"], cfg, token)
+
+    def body(h, xs):
+        layer_p, st = xs
+        h, new_st = ssm_decode_block(layer_p, cfg, h, st)
+        return h, new_st
+
+    x, new_cache = layer_scan(body, x, (params["layers"], cache))
+    x = nn.rmsnorm(params["final_norm"], x)
+    lg = nn.logits(params["embed"], cfg, x)[:, 0, :]
+    return lg, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int = 0):
+    """SSM cache is O(1) in sequence length — the long_500k selling point."""
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          nn.dt(cfg)),
+        "ssm": jnp.zeros((cfg.num_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_headdim), jnp.float32),
+    }

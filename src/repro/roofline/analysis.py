@@ -1,0 +1,129 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link           ~50 GB/s per link
+
+The compiled module under SPMD partitioning is PER DEVICE: cost_analysis()
+FLOPs/bytes and the HLO collective operand shapes are already per-chip, so
+
+    compute term    = flops_per_chip / peak
+    memory term     = bytes_per_chip / hbm_bw
+    collective term = collective_operand_bytes_per_chip / link_bw
+
+which is algebraically the brief's global/(chips x bw) form for a balanced
+program.  MODEL_FLOPS (6·N·D train / 2·N·D forward, N = active params) over
+HLO FLOPs measures how much compiled compute is "useful" (catches remat and
+redundancy waste); the reported ``perf_fraction`` is the ideal useful-compute
+time divided by the dominant term — the roofline score this repo optimizes in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # B/s
+    link_bw: float = 50e9  # B/s per ICI link
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shaped type like  bf16[8,128]{1,0}  or  f32[]  (scalars)
+_TYPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(r"\s(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> float:
+    """Per-device collective payload bytes, summed over every collective op.
+
+    Post-SPMD HLO prints the per-device RESULT type right after ``=`` (operands
+    are bare ``%refs``), so the payload of each op is the largest shaped type
+    on its line: all-reduce result == operand; all-gather result is the full
+    gathered buffer a device receives; reduce-scatter result is scaled back up
+    by the group size to recover operand bytes.  ``-done`` ops are skipped
+    (they alias their ``-start`` buffer — counting both would double-count
+    async collectives).
+    """
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        head = line[:m.start()]  # result portion, before the op name
+        types = _TYPE_RE.findall(head)
+        if not types:
+            continue
+        payload = max(_type_bytes(dt, dims) for dt, dims in types)
+        if m.group(1) == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                payload *= int(g.group(2))
+        total += payload
+    return float(total)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the GLOBAL step (6ND train / 2ND forward,
+    N = active params; decode processes global_batch tokens)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * (
+            shape.seq_len if cfg.family != "encdec" else
+            shape.seq_len + cfg.decoder_train_len)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * (
+            shape.seq_len if cfg.family != "encdec" else
+            shape.seq_len + cfg.decoder_train_len)
+        return 2.0 * n * tokens
+    # decode: one token per sequence; attention reads the cache (memory term)
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(cfg, shape, flops_per_dev: float, bytes_per_dev: float,
+                   collective_bytes_per_dev: float, n_dev: int,
+                   hw: Hardware = HW) -> dict:
+    compute_s = flops_per_dev / hw.peak_flops
+    memory_s = bytes_per_dev / hw.hbm_bw
+    collective_s = collective_bytes_per_dev / hw.link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+    mflops = model_flops(cfg, shape)
+    useful = mflops / n_dev / hw.peak_flops
+    dominant = max(compute_s, memory_s, collective_s)
+    return {
+        **{k: float(v) for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops_global": float(mflops),
+        "useful_flops_ratio": float(mflops / n_dev / max(flops_per_dev, 1.0)),
+        "perf_fraction": float(useful / max(dominant, 1e-30)),
+        "step_time_bound_s": float(dominant),
+    }

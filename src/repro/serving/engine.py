@@ -1,0 +1,262 @@
+"""Serving engine with ObjectCache layerwise prefill.
+
+The paper's execution pattern (§4.2): the inference framework waits for
+layer-ready notifications and proceeds as soon as the next layer's KV has
+arrived.  Here prefill runs *per layer* (one jitted layer step per model
+layer) so the engine can consume the storage server's layer events exactly
+like vLLM+LMCache consume NIXL notifications.
+
+Two timelines are tracked and composed with the Eq. 3 pipeline:
+  * transfer: the calibrated transport model's layer-ready times (the 100 Gbps
+    target cluster), from core.aggregation;
+  * compute: REAL wall-clock of the JAX layer steps on this host.
+Bytes are real end-to-end: KV leaves prefill as KV_L2TD objects, round-trips
+the object store, and re-enters attention as prefix KV — tests assert the
+logits are bit-for-bit equal to a no-cache prefill.
+
+Families: dense/vlm/moe(homogeneous) stream layerwise; ssm/hybrid reuse
+fixed-size state snapshots (fused path; see DESIGN.md §Arch-applicability);
+llama4-style alternating MoE uses the fused path as well.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Delivery
+from repro.core.hashing import chunk_keys
+from repro.core.overlap import per_layer_stalls, pipeline_ttft
+from repro.models import Model
+from repro.models import dense, moe
+from repro.models import layers as nn
+
+from .kv_chunks import cache_to_chunks, layer_payload_to_kv
+from .orchestrator import Orchestrator
+
+
+@dataclasses.dataclass
+class RequestResult:
+    req_id: str
+    logits: np.ndarray  # last-token logits [V]
+    new_tokens: list[int]
+    matched_tokens: int
+    delivery: Optional[Delivery]
+    ttft_model_s: float  # Eq. 3-composed TTFT (transfer model + real compute)
+    compute_s: float  # real wall compute
+    transfer_completion_s: float
+    stalls_s: list[float]
+
+    @property
+    def hit(self) -> bool:
+        return self.matched_tokens > 0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0
+    prefix_tokens_reused: int = 0
+    tokens_computed: int = 0
+    commits: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, orch: Orchestrator, *,
+                 max_decode_len: int = 64, sync_commit: bool = True) -> None:
+        self.model = model
+        self.params = params
+        self.orch = orch
+        self.cfg = model.cfg
+        self.spec = orch.spec
+        self.sync_commit = sync_commit
+        self.max_decode_len = max_decode_len
+        self.stats = EngineStats()
+        self._layerwise_ok = (self.cfg.family in ("dense", "vlm")
+                              or (self.cfg.family == "moe"
+                                  and self.cfg.moe_every == 1))
+        self._build_fns()
+
+    # ------------------------------------------------------------------
+    def _build_fns(self):
+        cfg = self.cfg
+
+        def embed_fn(embed_p, tokens, positions):
+            del positions
+            return nn.embed(embed_p, cfg, tokens)
+
+        def layer_fn(layer_p, x, pk, pv, positions):
+            if cfg.family == "moe":
+                h, seg, _ = moe.moe_block(layer_p, cfg, x, positions, (pk, pv))
+            else:
+                h, seg = dense.block(layer_p, cfg, x, positions, (pk, pv))
+            return h, seg[0], seg[1]
+
+        def layer_fn_nopre(layer_p, x, positions):
+            if cfg.family == "moe":
+                h, seg, _ = moe.moe_block(layer_p, cfg, x, positions)
+            else:
+                h, seg = dense.block(layer_p, cfg, x, positions)
+            return h, seg[0], seg[1]
+
+        def final_fn(params, x):
+            h = nn.rmsnorm(params["final_norm"], x[:, -1:, :])
+            return nn.logits(params["embed"], cfg, h)[:, 0, :]
+
+        self._embed = jax.jit(embed_fn)
+        self._layer = jax.jit(layer_fn)
+        self._layer_nopre = jax.jit(layer_fn_nopre)
+        self._final = jax.jit(final_fn)
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b))
+        self._prefill_prefix = jax.jit(
+            lambda p, b, pk, n: self.model.prefill(p, b, pk, n),
+            static_argnames=("n",))
+        self._decode = jax.jit(lambda p, c, t, pos:
+                               self.model.decode_step(p, c, t, pos))
+
+    def _layer_params(self, l: int):
+        return jax.tree.map(lambda a: a[l], self.params["layers"])
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens: np.ndarray, req_id: str = "req",
+               max_new_tokens: int = 0, layer_compute_hint_s: float = 1e-3
+               ) -> RequestResult:
+        """Serve one request: match -> (fetch | recompute) -> prefill ->
+        greedy decode -> commit fresh chunks."""
+        tokens = np.asarray(tokens, dtype=np.int32)
+        self.stats.requests += 1
+        plan = self.orch.plan(tokens, layer_compute_hint_s, req_id=req_id)
+        match = plan.match
+        # always keep >= 1 suffix token to produce next-token logits
+        n_chunks = match.num_chunks
+        while n_chunks * self.spec.chunk_tokens >= len(tokens):
+            n_chunks -= 1
+        P = n_chunks * self.spec.chunk_tokens
+        use_cache = plan.delivery is not None and n_chunks > 0
+
+        if not use_cache:
+            result = self._serve_full(tokens, req_id)
+        elif plan.delivery is Delivery.LAYERWISE and self._layerwise_ok:
+            result = self._serve_layerwise(tokens, plan, n_chunks, P, req_id)
+        else:
+            result = self._serve_chunkwise(tokens, plan, n_chunks, P, req_id)
+
+        self.stats.prefix_tokens_reused += result.matched_tokens
+        self.stats.tokens_computed += len(tokens) - result.matched_tokens
+
+        if max_new_tokens > 0:
+            result.new_tokens = self._greedy_decode(
+                result, tokens, max_new_tokens)
+        return result
+
+    # ------------------------------------------------------------------
+    def _serve_full(self, tokens, req_id) -> RequestResult:
+        batch = {"tokens": jnp.asarray(tokens)[None, :]}
+        t0 = time.perf_counter()
+        lg, cache = self._prefill(self.params, batch)
+        lg = np.asarray(jax.block_until_ready(lg)[0], np.float32)
+        dt = time.perf_counter() - t0
+        self._commit(tokens, cache)
+        self._last_cache = cache
+        return RequestResult(req_id, lg, [], 0, None, dt, dt, 0.0, [])
+
+    def _serve_chunkwise(self, tokens, plan, n_chunks, P, req_id) -> RequestResult:
+        res = self.orch.fetch(self._trim_plan(plan, n_chunks))
+        prefix = self._payloads_to_prefix(res.payloads, n_chunks)
+        batch = {"tokens": jnp.asarray(tokens[P:])[None, :]}
+        t0 = time.perf_counter()
+        lg, cache = self._prefill_prefix(self.params, batch, prefix, P)
+        lg = np.asarray(jax.block_until_ready(lg)[0], np.float32)
+        dt = time.perf_counter() - t0
+        ttft = res.completion_s + dt  # Fig. 7a: transfer then compute
+        self._commit(tokens, cache)
+        self._last_cache = cache
+        return RequestResult(req_id, lg, [], P, Delivery.CHUNKWISE, ttft, dt,
+                             res.completion_s, [])
+
+    def _serve_layerwise(self, tokens, plan, n_chunks, P, req_id) -> RequestResult:
+        cfg = self.cfg
+        res = self.orch.fetch(self._trim_plan(plan, n_chunks))
+        suffix = jnp.asarray(tokens[P:])[None, :]
+        positions = P + jnp.arange(suffix.shape[1])[None, :]
+        x = self._embed(self.params["embed"], suffix, positions)
+        act = jnp.dtype(cfg.compute_dtype)
+        segs_k, segs_v, compute_times = [], [], []
+        for l in range(cfg.num_layers):
+            # wait for the layer-ready notification (virtual transfer clock)
+            k_np, v_np = layer_payload_to_kv(res.payloads[l], n_chunks,
+                                             self.spec, act)
+            pk, pv = jnp.asarray(k_np)[None], jnp.asarray(v_np)[None]
+            t0 = time.perf_counter()
+            x, sk, sv = self._layer(self._layer_params(l), x, pk, pv, positions)
+            x = jax.block_until_ready(x)
+            compute_times.append(time.perf_counter() - t0)
+            segs_k.append(jnp.concatenate([pk, sk], axis=1))
+            segs_v.append(jnp.concatenate([pv, sv], axis=1))
+        t0 = time.perf_counter()
+        lg = np.asarray(jax.block_until_ready(
+            self._final(self.params, x))[0], np.float32)
+        final_dt = time.perf_counter() - t0
+        ready = [e.t_ready_s for e in res.events]
+        ttft = pipeline_ttft(ready, compute_times) + final_dt
+        stalls = per_layer_stalls(ready, compute_times)
+        cache = jnp.stack([jnp.stack([k, v]) for k, v in zip(segs_k, segs_v)])
+        self._commit(tokens, cache)
+        self._last_cache = cache
+        return RequestResult(req_id, lg, [], P, Delivery.LAYERWISE, ttft,
+                             sum(compute_times) + final_dt, res.completion_s,
+                             stalls)
+
+    # ------------------------------------------------------------------
+    def _trim_plan(self, plan, n_chunks):
+        if n_chunks == plan.match.num_chunks:
+            return plan
+        m = dataclasses.replace(plan.match,
+                                chunk_keys=plan.match.chunk_keys[:n_chunks],
+                                matched_tokens=n_chunks * self.spec.chunk_tokens)
+        return dataclasses.replace(plan, match=m)
+
+    def _payloads_to_prefix(self, payloads, n_chunks):
+        act = jnp.dtype(self.cfg.compute_dtype)
+        ks, vs = [], []
+        for p in payloads:
+            k, v = layer_payload_to_kv(p, n_chunks, self.spec, act)
+            ks.append(k)
+            vs.append(v)
+        return jnp.asarray(np.stack([np.stack(ks), np.stack(vs)], axis=1))[:, :, None]
+
+    def _commit(self, tokens, cache):
+        if not self.sync_commit:
+            return
+        keys_all = chunk_keys(tokens, self.spec.chunk_tokens)
+        objs = cache_to_chunks(np.asarray(cache), keys_all, self.spec)
+        new = self.orch.commit(tokens, objs)
+        self.stats.commits += len(new)
+
+    def _greedy_decode(self, result, tokens, max_new_tokens) -> list[int]:
+        cache = self._last_cache
+        cfg = self.cfg
+        S0 = len(tokens)
+        room = max_new_tokens
+
+        def grow(a):
+            if a.ndim >= 4 and a.shape[3] == S0:
+                pad = [(0, 0)] * a.ndim
+                pad[3] = (0, room)
+                return jnp.pad(a, pad)
+            return a
+        cache = jax.tree.map(grow, cache)
+        out = []
+        tok = int(np.argmax(result.logits[:cfg.vocab_size]))
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            pos = jnp.asarray([S0 + i], jnp.int32)
+            lg, cache = self._decode(self.params, cache,
+                                     jnp.asarray([[tok]], jnp.int32), pos)
+            tok = int(np.argmax(np.asarray(lg[0])[:cfg.vocab_size]))
+            out.append(tok)
+        return out

@@ -1,0 +1,79 @@
+"""Bridging model KV caches <-> KV_L2TD chunk objects.
+
+The model side speaks [L, 2, B, S, KV, dh] arrays; the storage side speaks
+immutable per-chunk byte objects (layer-major).  These converters are the only
+place the two layouts meet.
+
+bf16 note: numpy has no bfloat16, so device bf16 arrays cross the boundary as
+uint16 words (bit-identical); JAX views them back on the way in.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import KVSpec, pack_chunk, unpack_layer_payload
+from repro.models.config import ModelConfig
+
+
+def _to_wire(arr: np.ndarray) -> np.ndarray:
+    """Reinterpret to the unsigned wire word of the same width (bit-exact)."""
+    arr = np.asarray(arr)
+    wire = {1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize]
+    return arr.view(wire)
+
+
+def _from_wire(arr: np.ndarray, dtype) -> np.ndarray:
+    """Inverse of :func:`_to_wire` — a bit view, never a value cast."""
+    dtype = jnp.dtype(dtype)
+    assert arr.dtype.itemsize == dtype.itemsize, (arr.dtype, dtype)
+    return arr.view(dtype)
+
+
+def cache_to_chunks(cache, keys: list[bytes], spec: KVSpec, batch_row: int = 0,
+                    start_token: int = 0) -> dict[bytes, bytes]:
+    """Pack ``len(keys)`` G-token chunks of one sequence's KV into objects.
+
+    ``cache``: [L, 2, B, S, KV, dh] (prefix+suffix as produced by prefill).
+    Chunk i covers tokens [start_token + i*G, start_token + (i+1)*G).
+    """
+    G = spec.chunk_tokens
+    L = spec.num_layers
+    width = spec.num_kv_heads * spec.head_dim
+    arr = _to_wire(cache)  # [L, 2, B, S, KV, dh]
+    out: dict[bytes, bytes] = {}
+    for i, key in enumerate(keys):
+        lo = start_token + i * G
+        sl = arr[:, :, batch_row, lo:lo + G]  # [L, 2, G, KV, dh]
+        k = np.ascontiguousarray(sl[:, 0].reshape(L, G, width))
+        v = np.ascontiguousarray(sl[:, 1].reshape(L, G, width))
+        out[key] = pack_chunk(k, v, spec)
+    return out
+
+
+def layer_payload_to_kv(payload: bytes, num_chunks: int, spec: KVSpec, dtype
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """One aggregated layer payload -> (k, v) [P, KV, dh] arrays (P = N*G)."""
+    k, v = unpack_layer_payload(payload, num_chunks, spec)
+    P = num_chunks * spec.chunk_tokens
+    shape = (P, spec.num_kv_heads, spec.head_dim)
+    return (_from_wire(k, dtype).reshape(shape),
+            _from_wire(v, dtype).reshape(shape))
+
+
+def prefix_kv_from_payloads(payloads: list[bytes], num_chunks: int,
+                            spec: KVSpec, dtype) -> jnp.ndarray:
+    """All layers -> [L, 2, 1, P, KV, dh] prefix-KV (batch dim of 1)."""
+    ks, vs = [], []
+    for payload in payloads:
+        k, v = layer_payload_to_kv(payload, num_chunks, spec, dtype)
+        ks.append(k)
+        vs.append(v)
+    k = np.stack(ks)[:, None]  # [L, 1, P, KV, dh] -> stack along new axis 1
+    v = np.stack(vs)[:, None]
+    return jnp.asarray(np.stack([k, v], axis=1))  # [L, 2, 1, P, KV, dh]
+
+
+def chunks_from_store(store, keys: list[bytes]) -> list[bytes]:
+    return [store.get(k) for k in keys]

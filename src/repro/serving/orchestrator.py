@@ -1,0 +1,121 @@
+"""Central orchestrator (paper Fig. 5).
+
+Receives a request, performs prefix matching against the radix index, decides
+the delivery mode (Eq. 2), obtains a bandwidth allocation from the shared
+pool (§3.6), and issues the ObjectCache descriptor to the gateway.  Also owns
+the straggler story for the storage tier: hedged reads (duplicate the request
+to a second replica after the hedge quantile) and the recompute fallback of
+paper §6.2 when the hit is too small to amortise S3 overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (Delivery, FlowRequest, Gateway, KVSpec, Policy,
+                        RadixIndex, make_descriptor, select_mode)
+from repro.core.aggregation import DEFAULT_THETA_BYTES, AggResult
+from repro.core.scheduler import allocate
+from repro.core.types import MatchResult
+
+
+@dataclasses.dataclass
+class TransferPlan:
+    match: MatchResult
+    delivery: Optional[Delivery]  # None => recompute fallback (no fetch)
+    rate: Optional[float]  # allocated bandwidth (None = unthrottled)
+    hedged: bool = False
+
+
+@dataclasses.dataclass
+class StragglerModel:
+    """Lognormal service-time inflation of the storage tier; hedging takes the
+    min of two independent samples (classic tail-cutting)."""
+
+    sigma: float = 0.0  # 0 => deterministic
+    hedge_quantile: float = 0.95
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self, hedged: bool) -> float:
+        if self.sigma == 0.0:
+            return 1.0
+        a = float(self._rng.lognormal(0.0, self.sigma))
+        if not hedged:
+            return a
+        b = float(self._rng.lognormal(0.0, self.sigma))
+        return min(a, b)
+
+
+class Orchestrator:
+    def __init__(self, index: RadixIndex, gateway: Gateway, spec: KVSpec,
+                 *, theta_bytes: int = DEFAULT_THETA_BYTES,
+                 min_hit_chunks: int = 1,
+                 bandwidth_cap: Optional[float] = None,
+                 policy: Policy = Policy.CAL_STALL_OPT,
+                 margin: float = 0.0,
+                 straggler: Optional[StragglerModel] = None,
+                 hedge: bool = False) -> None:
+        self.index = index
+        self.gateway = gateway
+        self.spec = spec
+        self.theta = theta_bytes
+        self.min_hit_chunks = min_hit_chunks
+        self.cap = bandwidth_cap
+        self.policy = policy
+        self.margin = margin
+        self.straggler = straggler or StragglerModel()
+        self.hedge = hedge
+        self.stats = {"hits": 0, "misses": 0, "fallbacks": 0, "hedged": 0}
+
+    # -- planning ------------------------------------------------------------
+    def plan(self, tokens, layer_compute_s: float,
+             active: Optional[list[FlowRequest]] = None,
+             req_id: str = "req") -> TransferPlan:
+        match = self.index.match(tokens)
+        if match.num_chunks < self.min_hit_chunks:
+            self.stats["misses" if not match.is_hit else "fallbacks"] += 1
+            return TransferPlan(match, None, None)
+        self.stats["hits"] += 1
+        W = self.spec.matched_payload_bytes(match.num_chunks)
+        delivery = select_mode(W, self.theta)
+        rate = None
+        if self.cap is not None and delivery is Delivery.LAYERWISE:
+            me = FlowRequest(req_id,
+                             match.num_chunks * self.spec.per_layer_chunk_bytes,
+                             layer_compute_s, self.spec.num_layers)
+            flows = [me, *(active or [])]
+            rate = allocate(flows, self.cap, self.policy, self.margin)[req_id]
+        return TransferPlan(match, delivery, rate, hedged=self.hedge)
+
+    # -- execution ------------------------------------------------------------
+    def fetch(self, plan: TransferPlan) -> AggResult:
+        assert plan.delivery is not None
+        desc = make_descriptor(list(plan.match.chunk_keys), self.spec,
+                               plan.delivery)
+        self.index.pin(plan.match.chunk_keys)
+        try:
+            res = self.gateway.objectcache_get(desc.to_wire(),
+                                               rate_limit=plan.rate)
+        finally:
+            self.index.unpin(plan.match.chunk_keys)
+        # straggler inflation (and hedging) applies to the storage events
+        infl = self.straggler.sample(plan.hedged)
+        if plan.hedged:
+            self.stats["hedged"] += 1
+        if infl != 1.0:
+            for e in res.events:
+                e.t_ready_s *= infl
+        return res
+
+    # -- commit (write-behind of freshly produced chunks) ---------------------
+    def commit(self, tokens, chunk_objects: dict[bytes, bytes]) -> list[bytes]:
+        new_keys = self.index.insert(tokens)
+        for key in new_keys:
+            if key in chunk_objects:
+                self.gateway.put(key, chunk_objects[key])
+        return new_keys

@@ -1,0 +1,62 @@
+"""Train step factory: loss -> grads -> AdamW, with microbatch gradient
+accumulation (scan), remat, donation, and an optional compressed pod-axis
+gradient reduction for the multi-pod mesh."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+
+from .compression import make_pod_reducer
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    remat: bool = True, microbatches: int = 1,
+                    pod_reduce: str = "none", mesh=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch``: dict of [B, ...] arrays (global batch).
+
+    ``pod_reduce`` in {none, fp32, bf16, int8}: when not 'none', gradients are
+    explicitly reduced over the 'pod' mesh axis with the chosen wire format
+    (int8 = 4x less DCN traffic) inside shard_map; otherwise GSPMD inserts the
+    reduction implicitly from the batch sharding.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0
+        mb = {k: v.reshape(microbatches, B // microbatches, *v.shape[1:])
+              for k, v in batch.items()}
+
+        def body(acc, b):
+            l, g = jax.value_and_grad(loss_fn)(params, b)
+            return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g)), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (l, g), _ = jax.lax.scan(body, zero, mb)
+        inv = 1.0 / microbatches
+        return l * inv, jax.tree.map(lambda x: x * inv, g)
+
+    reducer = make_pod_reducer(pod_reduce) if pod_reduce != "none" else None
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if reducer is not None:
+            grads = reducer(grads)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,286 @@
+"""Unit + property tests for the ObjectCache protocol layer
+(hashing, layout, descriptor, radix index, object stores, aggregation)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Delivery, Descriptor, Gateway, InMemoryStore, KVSpec,
+                        RadixIndex, StorageServer, TieredStore, chunk_keys,
+                        layer_range, make_descriptor, pack_chunk, select_mode,
+                        unpack_chunk, unpack_layer_payload)
+from repro.core.aggregation import DEFAULT_THETA_BYTES
+from repro.core.hashing import GENESIS
+from repro.core.transport import S3_RDMA_AGG
+
+
+# ---------------------------------------------------------------------------
+# rolling-hash chunk keys
+# ---------------------------------------------------------------------------
+class TestHashing:
+    def test_deterministic(self):
+        toks = np.arange(64)
+        assert chunk_keys(toks, 16) == chunk_keys(toks, 16)
+
+    def test_prefix_stability(self):
+        """Shared prefixes yield shared keys — the content-address property."""
+        a = np.arange(64)
+        b = np.concatenate([np.arange(48), np.array([999] * 16)])
+        ka, kb = chunk_keys(a, 16), chunk_keys(b, 16)
+        assert ka[:3] == kb[:3]
+        assert ka[3] != kb[3]
+
+    def test_chain_dependency(self):
+        """H_i depends on H_{i-1}: same tokens at a different position differ."""
+        a = chunk_keys(np.array([1] * 32), 16)
+        assert a[0] != a[1]
+
+    def test_incomplete_tail_not_addressable(self):
+        assert len(chunk_keys(np.arange(31), 16)) == 1
+
+    @given(st.integers(1, 200), st.integers(1, 32))
+    @settings(max_examples=30, deadline=None)
+    def test_key_count(self, n, g):
+        toks = np.arange(n)
+        assert len(chunk_keys(toks, g)) == n // g
+
+
+# ---------------------------------------------------------------------------
+# KV_L2TD layout
+# ---------------------------------------------------------------------------
+class TestLayout:
+    @pytest.mark.parametrize("dtype_bytes", [1, 2, 4])
+    def test_roundtrip(self, dtype_bytes):
+        spec = KVSpec(num_layers=3, chunk_tokens=8, num_kv_heads=2, head_dim=4,
+                      dtype_bytes=dtype_bytes)
+        rng = np.random.default_rng(0)
+        shape = (3, 8, 8)
+        dt = {1: np.uint8, 2: np.uint16, 4: np.uint32}[dtype_bytes]
+        k = rng.integers(0, 2 ** (8 * dtype_bytes), size=shape).astype(dt)
+        v = rng.integers(0, 2 ** (8 * dtype_bytes), size=shape).astype(dt)
+        k2, v2 = unpack_chunk(pack_chunk(k, v, spec), spec)
+        np.testing.assert_array_equal(k, k2)
+        np.testing.assert_array_equal(v, v2)
+
+    def test_layer_range_is_arithmetic(self):
+        spec = KVSpec(4, 16, 2, 8, 2)
+        S = spec.per_layer_chunk_bytes
+        assert S == 2 * 16 * 2 * 8 * 2  # Eq. 1
+        assert layer_range(2, spec) == (2 * S, 3 * S)
+
+    def test_layer_slice_matches_pack(self):
+        """The byte range [l*S,(l+1)*S) of the packed chunk is layer l."""
+        spec = KVSpec(4, 8, 2, 4, 2)
+        rng = np.random.default_rng(1)
+        k = rng.integers(0, 2**16, size=(4, 8, 8), dtype=np.uint16)
+        v = rng.integers(0, 2**16, size=(4, 8, 8), dtype=np.uint16)
+        buf = pack_chunk(k, v, spec)
+        lo, hi = layer_range(1, spec)
+        kk, vv = unpack_layer_payload(buf[lo:hi], 1, spec)
+        np.testing.assert_array_equal(kk, k[1])
+        np.testing.assert_array_equal(vv, v[1])
+
+
+# ---------------------------------------------------------------------------
+# descriptor
+# ---------------------------------------------------------------------------
+class TestDescriptor:
+    def test_wire_roundtrip(self):
+        spec = KVSpec(32, 16, 8, 128, 2)
+        keys = chunk_keys(np.arange(64), 16)
+        for deliv in (Delivery.LAYERWISE, Delivery.CHUNKWISE):
+            d = make_descriptor(keys, spec, deliv)
+            assert Descriptor.from_wire(d.to_wire()) == d
+
+    def test_payload_math(self):
+        spec = KVSpec(32, 16, 8, 128, 2)
+        d = make_descriptor(chunk_keys(np.arange(64), 16), spec, Delivery.LAYERWISE)
+        assert d.total_bytes == 4 * spec.chunk_bytes  # W = N·L·S
+        assert d.layer_payload_bytes == 4 * spec.per_layer_chunk_bytes
+
+    def test_rejects_garbage(self):
+        with pytest.raises(ValueError):
+            Descriptor.from_wire(b"NOPE" + b"\x00" * 40)
+
+
+# ---------------------------------------------------------------------------
+# radix prefix index (Fig. 3 semantics)
+# ---------------------------------------------------------------------------
+class TestRadix:
+    def test_longest_match(self):
+        idx = RadixIndex(16)
+        toks = np.arange(128)
+        idx.insert(toks)
+        m = idx.match(np.concatenate([toks[:80], [7] * 48]))
+        assert m.matched_tokens == 80
+
+    def test_fine_granularity_preserves_branch_points(self):
+        """Fig. 3: with fine chunks, divergence inside a coarse block still
+        reuses everything before the divergence point."""
+        shared = np.arange(96)
+        a = np.concatenate([shared, [1] * 32])
+        b = np.concatenate([shared, [2] * 32])
+        fine, coarse = RadixIndex(16), RadixIndex(64)
+        fine.insert(a), coarse.insert(a)
+        # request b: shares exactly 96 tokens
+        assert fine.match(b).matched_tokens == 96
+        assert coarse.match(b).matched_tokens == 64  # merged branch point
+        assert fine.branch_points() == 0
+        fine.insert(b)
+        assert fine.branch_points() == 1
+
+    def test_dedup_on_insert(self):
+        idx = RadixIndex(16)
+        toks = np.arange(64)
+        new1 = idx.insert(toks)
+        new2 = idx.insert(toks)
+        assert len(new1) == 4 and new2 == []
+
+    def test_lru_leaf_eviction(self):
+        idx = RadixIndex(16, max_chunks=4)
+        idx.insert(np.arange(64))  # 4 chunks — at capacity
+        idx.insert(np.concatenate([np.arange(48), [5] * 16]))  # +1 leaf
+        assert len(idx) == 4
+        assert idx.evictions == 1
+
+    def test_pinned_not_evicted(self):
+        idx = RadixIndex(16, max_chunks=2)
+        keys = idx.insert(np.arange(32))
+        idx.pin(keys)
+        idx.insert(np.concatenate([np.arange(16), [9] * 16]))
+        # pinned leaves survive even over capacity
+        assert all(idx.contains(k) for k in keys)
+        idx.unpin(keys)
+
+    @given(st.lists(st.integers(0, 3), min_size=0, max_size=60),
+           st.lists(st.integers(0, 3), min_size=0, max_size=60))
+    @settings(max_examples=50, deadline=None)
+    def test_property_match_is_common_prefix(self, a, b):
+        """matched_tokens == (common token prefix length) rounded down to G."""
+        G = 4
+        idx = RadixIndex(G)
+        idx.insert(np.array(a, dtype=np.int32))
+        m = idx.match(np.array(b, dtype=np.int32))
+        common = 0
+        for x, y in zip(a, b):
+            if x != y:
+                break
+            common += 1
+        expect = min((common // G) * G, (len(a) // G) * G, (len(b) // G) * G)
+        assert m.matched_tokens == expect
+
+
+# ---------------------------------------------------------------------------
+# object stores
+# ---------------------------------------------------------------------------
+class TestStores:
+    def test_inmemory_dedup(self):
+        s = InMemoryStore()
+        s.put(b"k" * 16, b"data")
+        s.put(b"k" * 16, b"data")
+        assert s.stats.dedup_hits == 1
+
+    def test_filestore_roundtrip(self, tmp_path):
+        from repro.core import FileStore
+        s = FileStore(str(tmp_path))
+        s.put(b"a" * 16, b"hello world")
+        assert s.get(b"a" * 16) == b"hello world"
+        assert s.range_get(b"a" * 16, 6, 5) == b"world"
+        assert s.object_size(b"a" * 16) == 11
+
+    def test_tiered_promotes_and_evicts(self):
+        cold = InMemoryStore()
+        t = TieredStore(cold, hot_capacity_bytes=6, populate_on_write=False)
+        t.put(b"a" * 16, b"xxxx")
+        t.put(b"b" * 16, b"yyyy")
+        t.get(b"a" * 16)  # promote a
+        assert t.hot_misses == 1
+        t.get(b"a" * 16)
+        assert t.hot_hits == 1
+        t.get(b"b" * 16)  # promote b -> evicts a (capacity 8)
+        t.get(b"a" * 16)
+        assert t.hot_misses == 3
+
+
+# ---------------------------------------------------------------------------
+# server-side aggregation (Table A3)
+# ---------------------------------------------------------------------------
+def _mk_corpus(n_chunks=5, spec=None, seed=0):
+    spec = spec or KVSpec(num_layers=4, chunk_tokens=8, num_kv_heads=2,
+                          head_dim=4, dtype_bytes=2)
+    rng = np.random.default_rng(seed)
+    store = InMemoryStore()
+    ks, vs, keys = [], [], []
+    toks = rng.integers(0, 100, size=n_chunks * spec.chunk_tokens)
+    keys = chunk_keys(toks, spec.chunk_tokens)
+    for key in keys:
+        k = rng.integers(0, 2**16, size=(4, 8, 8), dtype=np.uint16)
+        v = rng.integers(0, 2**16, size=(4, 8, 8), dtype=np.uint16)
+        store.put(key, pack_chunk(k, v, spec))
+        ks.append(k), vs.append(v)
+    return spec, store, keys, ks, vs
+
+
+class TestAggregation:
+    def test_layer_major_assembly_in_prefix_order(self):
+        spec, store, keys, ks, vs = _mk_corpus()
+        server = StorageServer(store, S3_RDMA_AGG)
+        desc = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        res = server.execute(desc)
+        assert len(res.payloads) == spec.num_layers
+        for l in range(spec.num_layers):
+            kk, vv = unpack_layer_payload(res.payloads[l], len(keys), spec)
+            np.testing.assert_array_equal(kk, np.concatenate([k[l] for k in ks]))
+            np.testing.assert_array_equal(vv, np.concatenate([v[l] for v in vs]))
+
+    def test_layer_ready_monotone(self):
+        spec, store, keys, *_ = _mk_corpus()
+        server = StorageServer(store, S3_RDMA_AGG)
+        res = server.execute(make_descriptor(keys, spec, Delivery.LAYERWISE))
+        times = [e.t_ready_s for e in res.events]
+        assert times == sorted(times)
+        assert all(t > 0 for t in times)
+
+    def test_chunkwise_all_layers_ready_at_completion(self):
+        spec, store, keys, *_ = _mk_corpus()
+        server = StorageServer(store, S3_RDMA_AGG)
+        res = server.execute(make_descriptor(keys, spec, Delivery.CHUNKWISE))
+        assert len({e.t_ready_s for e in res.events}) == 1  # Fig. 7a
+
+    def test_chunkwise_and_layerwise_same_bytes(self):
+        spec, store, keys, *_ = _mk_corpus()
+        server = StorageServer(store, S3_RDMA_AGG)
+        lw = server.execute(make_descriptor(keys, spec, Delivery.LAYERWISE))
+        cw = server.execute(make_descriptor(keys, spec, Delivery.CHUNKWISE))
+        assert lw.payloads == cw.payloads
+
+    def test_rate_limit_slows_wire(self):
+        spec, store, keys, *_ = _mk_corpus(n_chunks=16)
+        server = StorageServer(store, S3_RDMA_AGG)
+        desc = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        fast = server.execute(desc).completion_s
+        slow = server.execute(desc, rate_limit=1e6).completion_s
+        assert slow > fast
+
+    def test_gateway_objectcache_path(self):
+        spec, store, keys, ks, _ = _mk_corpus()
+        gw = Gateway(store)
+        desc = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        res = gw.objectcache_get(desc.to_wire())
+        kk, _ = unpack_layer_payload(res.payloads[0], len(keys), spec)
+        np.testing.assert_array_equal(kk, np.concatenate([k[0] for k in ks]))
+
+
+# ---------------------------------------------------------------------------
+# mode selection (Eq. 2)
+# ---------------------------------------------------------------------------
+class TestModeSelect:
+    def test_threshold(self):
+        assert select_mode(DEFAULT_THETA_BYTES - 1) is Delivery.CHUNKWISE
+        assert select_mode(DEFAULT_THETA_BYTES) is Delivery.LAYERWISE
+
+    @given(st.integers(0, 2**40), st.integers(1, 2**40))
+    @settings(max_examples=50, deadline=None)
+    def test_property_monotone(self, w, theta):
+        """Larger payloads never flip back to chunkwise."""
+        if select_mode(w, theta) is Delivery.LAYERWISE:
+            assert select_mode(w + 1, theta) is Delivery.LAYERWISE

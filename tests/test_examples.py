@@ -1,0 +1,40 @@
+"""The runnable examples must actually run (subprocess, CPU)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_example(name: str, timeout: int = 540) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", name)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_quickstart():
+    out = _run_example("quickstart.py")
+    assert "OK: cached-prefix logits == from-scratch logits" in out
+
+
+def test_multi_tenant_scheduling():
+    out = _run_example("multi_tenant_scheduling.py")
+    assert "Workload A" in out and "cal-stall-opt" in out
+    # spot-check one Table A9 cell (A / stall-opt / 64K,87.5% = 24.81 Gbps)
+    assert "24.81G" in out
+
+
+def test_layerwise_overlap():
+    out = _run_example("layerwise_overlap.py")
+    assert "B_req" in out
+
+
+@pytest.mark.slow
+def test_train_ft():
+    out = _run_example("train_ft.py")
+    assert "OK: training survived failure and converged" in out

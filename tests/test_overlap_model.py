@@ -1,0 +1,155 @@
+"""Tests of the layerwise overlap model (Eq. 3) and the TTFT simulator's
+agreement with the paper's headline claims (§5.5–5.7, Table A8/A12)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Policy, chunkwise_ttft, layerwise_ttft,
+                        per_layer_stalls, pipeline_ttft, required_bandwidth)
+from repro.core.compute_model import A100_LLAMA31_8B, PaperComputeModel
+from repro.core.simulator import (PAPER_MARGIN_BPS, WORKLOAD_A, WORKLOAD_B,
+                                  WORKLOAD_C, ServingSimulator,
+                                  WorkloadRequest)
+
+
+class TestEq3:
+    def test_transfer_bound(self):
+        # X >> C: every stage exposes transfer; TTFT = sum X + C_last
+        X, C = [2.0] * 4, [1.0] * 4
+        assert layerwise_ttft(X, C) == pytest.approx(2 + 2 * 3 + 1)
+
+    def test_compute_bound(self):
+        # X << C: only X_0 is visible
+        X, C = [0.5] * 4, [2.0] * 4
+        assert layerwise_ttft(X, C) == pytest.approx(0.5 + 3 * 2 + 2)
+
+    def test_chunkwise_upper_bounds_layerwise(self):
+        X, C = [1.0, 2.0, 0.5, 1.5], [1.0, 1.0, 2.0, 0.5]
+        assert layerwise_ttft(X, C) <= chunkwise_ttft(sum(X), C)
+
+    @given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=64),
+           st.lists(st.floats(0.0, 10.0), min_size=1, max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def test_property_eq3_bounds_event_stepping(self, X, C):
+        """Eq. 3 models ONE-layer prefetch (transfer l+1 starts only after
+        stage l), so it upper-bounds the unconstrained pipeline where layer l
+        arrives at cumsum(X)[l], and both are at most chunkwise."""
+        n = min(len(X), len(C))
+        X, C = X[:n], C[:n]
+        ready = []
+        t = 0.0
+        for x in X:
+            t += x
+            ready.append(t)
+        eq3 = layerwise_ttft(X, C)
+        assert pipeline_ttft(ready, C) <= eq3 + 1e-9
+        assert eq3 <= chunkwise_ttft(sum(X), C) + 1e-9
+
+    @given(st.floats(0.01, 10.0), st.floats(0.01, 10.0), st.integers(1, 64))
+    @settings(max_examples=100, deadline=None)
+    def test_property_eq3_exact_for_constant_layers(self, x, c, L):
+        """In the paper's regime (footnote 1: s_i, c_i constant across layers)
+        Eq. 3 and event-stepping agree exactly."""
+        X, C = [x] * L, [c] * L
+        ready = [x * (l + 1) for l in range(L)]
+        assert layerwise_ttft(X, C) == pytest.approx(pipeline_ttft(ready, C))
+
+    @given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=32),
+           st.lists(st.floats(0.01, 10.0), min_size=2, max_size=32))
+    @settings(max_examples=100, deadline=None)
+    def test_property_layerwise_never_worse(self, X, C):
+        n = min(len(X), len(C))
+        assert layerwise_ttft(X[:n], C[:n]) <= chunkwise_ttft(sum(X[:n]), C[:n]) + 1e-9
+
+    def test_stalls_localised(self):
+        ready = [1.0, 1.5, 10.0]
+        C = [1.0, 1.0, 1.0]
+        stalls = per_layer_stalls(ready, C)
+        assert stalls == pytest.approx([1.0, 0.0, 7.0])
+
+
+class TestTableA8:
+    """The compute model must reproduce Table A8's required-bandwidth column."""
+
+    @pytest.mark.parametrize("key,expect_gbs", [
+        ((4096, 0.500), 1.45), ((4096, 0.875), 7.41),
+        ((16384, 0.500), 1.12), ((16384, 0.875), 6.67),
+        ((32768, 0.500), 0.83), ((32768, 0.875), 4.92),
+        ((65536, 0.500), 0.50), ((65536, 0.875), 3.10),
+    ])
+    def test_required_bw(self, key, expect_gbs):
+        m = PaperComputeModel()
+        got = m.required_bw(*key) / 1e9
+        assert got == pytest.approx(expect_gbs, rel=0.02)
+
+    def test_longer_context_relaxes_bandwidth(self):
+        """§5.4's counter-intuitive takeaway: more cached bytes, but a larger
+        compute window — B_req falls with context at fixed hit rate."""
+        m = PaperComputeModel()
+        for r in (0.5, 0.875):
+            bws = [m.required_bw(c, r) for c in (4096, 16384, 32768, 65536)]
+            assert bws == sorted(bws, reverse=True)
+
+
+class TestHeadlineTTFT:
+    def test_64k_overhead_within_paper_band(self):
+        """S3Agg-LW within 0.1–5.6% of opt-local-LW at 64K (G=64)."""
+        sim = ServingSimulator()
+        for r in (0.5, 0.875):
+            w = WorkloadRequest("w", 65536, r, 64)
+            lw = sim.ttft_layerwise(w).ttft_s
+            opt = sim.ttft_opt_local(w)
+            overhead = lw / opt - 1
+            assert 0.0 <= overhead <= 0.056, (r, overhead)
+
+    def test_4k_overhead_tens_of_ms(self):
+        """At 4K the gap is fixed-cost dominated: 56–75 ms band (G=64)."""
+        sim = ServingSimulator()
+        for r in (0.5, 0.875):
+            w = WorkloadRequest("w", 4096, r, 64)
+            gap = sim.ttft_layerwise(w).ttft_s - sim.ttft_opt_local(w)
+            assert 0.040 <= gap <= 0.085, (r, gap)
+
+    def test_g16_worse_than_g64_at_64k(self):
+        """§5.5: small chunk granularity prevents full aggregation throughput."""
+        sim = ServingSimulator()
+        t16 = sim.ttft_layerwise(WorkloadRequest("w", 65536, 0.875, 16)).ttft_s
+        t64 = sim.ttft_layerwise(WorkloadRequest("w", 65536, 0.875, 64)).ttft_s
+        assert t16 > t64
+
+    def test_layerwise_less_sensitive_to_bandwidth(self):
+        """§5.6: a 10 Gbps cap barely moves 64K/50% (B_req=0.5 GB/s) but
+        hits 87.5% hit-rate configs (B_req > cap)."""
+        sim = ServingSimulator()
+        cap = 10e9 / 8
+        w_lo = WorkloadRequest("lo", 65536, 0.5, 64)
+        w_hi = WorkloadRequest("hi", 65536, 0.875, 64)
+        lo_incr = (sim.ttft_layerwise(w_lo, rate_limit=cap).ttft_s /
+                   sim.ttft_layerwise(w_lo).ttft_s) - 1
+        hi_incr = (sim.ttft_layerwise(w_hi, rate_limit=cap).ttft_s /
+                   sim.ttft_layerwise(w_hi).ttft_s) - 1
+        assert lo_incr < 0.02
+        assert hi_incr > 0.25
+
+    def test_scheduler_beats_equal_on_paper_workloads(self):
+        """Fig. 16 / Table A12: Calibrated Stall-opt reduces added TTFT vs
+        Equal by 1.2–1.8x on workloads A and B."""
+        sim = ServingSimulator()
+        for reqs, cap in (WORKLOAD_A, WORKLOAD_B):
+            base = sim.unthrottled_total_ttft(reqs)
+            added_eq = sim.workload_total_ttft(reqs, cap, Policy.EQUAL) - base
+            added_cal = sim.workload_total_ttft(
+                reqs, cap, Policy.CAL_STALL_OPT, PAPER_MARGIN_BPS) - base
+            assert added_cal < added_eq
+            assert added_eq / max(added_cal, 1e-9) > 1.15
+
+    def test_workload_c_stall_opt_close_to_calibrated(self):
+        """§5.7: under the dense 50 Gbps Workload C the margin can mildly
+        over-provision — plain Stall-opt is competitive; both beat Equal."""
+        sim = ServingSimulator()
+        reqs, cap = WORKLOAD_C
+        base = sim.unthrottled_total_ttft(reqs)
+        added = {p: sim.workload_total_ttft(
+            reqs, cap, p, PAPER_MARGIN_BPS if p is Policy.CAL_STALL_OPT else 0.0)
+            - base for p in (Policy.EQUAL, Policy.STALL_OPT, Policy.CAL_STALL_OPT)}
+        assert added[Policy.STALL_OPT] < added[Policy.EQUAL]
+        assert added[Policy.CAL_STALL_OPT] < added[Policy.EQUAL]

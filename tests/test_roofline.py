@@ -1,0 +1,103 @@
+"""Roofline machinery tests: HLO collective parsing, the scan-body-once
+pitfall, and term arithmetic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.analysis import (HW, collective_bytes_from_hlo,
+                                     model_flops, roofline_terms)
+
+
+class TestCollectiveParsing:
+    def test_counts_all_reduce_result_bytes(self):
+        hlo = """
+  %all-reduce.48 = f32[128,16]{1,0} all-reduce(%wrapped), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), use_global_device_ids=true, to_apply=%region
+"""
+        assert collective_bytes_from_hlo(hlo) == 128 * 16 * 4
+
+    def test_skips_done_ops(self):
+        hlo = """
+  %all-gather-start = (bf16[8,64]{1,0}, bf16[128,64]{1,0}) all-gather-start(%p), replica_groups=[1,16]<=[16]
+  %all-gather-done = bf16[128,64]{1,0} all-gather-done(%all-gather-start)
+"""
+        # counts the start's largest buffer (the gathered result), not -done
+        assert collective_bytes_from_hlo(hlo) == 128 * 64 * 2
+
+    def test_reduce_scatter_scaled_by_group(self):
+        hlo = """
+  %reduce-scatter.1 = f32[8,16]{1,0} reduce-scatter(%x), replica_groups=[2,8]<=[16], dimensions={0}
+"""
+        assert collective_bytes_from_hlo(hlo) == 8 * 16 * 4 * 8
+
+    def test_ignores_instruction_names(self):
+        hlo = "  %all-reduce.5 = f32[4]{0} add(%a, %b)\n"
+        assert collective_bytes_from_hlo(hlo) == 0
+
+    def test_real_module_nonzero(self):
+        mesh = jax.make_mesh((1,), ("x",))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        with mesh:
+            c = jax.jit(lambda x: jax.lax.with_sharding_constraint(
+                x.sum(), NamedSharding(mesh, P()))).lower(
+                jnp.ones((8, 8))).compile()
+        # single-device: no collectives expected
+        assert collective_bytes_from_hlo(c.as_text()) == 0.0
+
+
+class TestScanBodyOnce:
+    def test_cost_analysis_counts_scan_body_once(self):
+        """The measurement pitfall that forces the unrolled roofline pass:
+        XLA cost_analysis of a lax.scan counts the body ONCE."""
+        M = 64
+        a = jnp.ones((M, M))
+        w = jnp.ones((10, M, M))
+
+        def scanned(a, w):
+            return jax.lax.scan(lambda x, wi: (x @ wi, None), a, w)[0]
+
+        def unrolled(a, w):
+            return jax.lax.scan(lambda x, wi: (x @ wi, None), a, w,
+                                unroll=True)[0]
+
+        f_scan = jax.jit(scanned).lower(a, w).compile().cost_analysis()["flops"]
+        f_unroll = jax.jit(unrolled).lower(a, w).compile().cost_analysis()["flops"]
+        assert f_unroll == pytest.approx(10 * f_scan, rel=0.01)
+
+
+class TestTerms:
+    def test_bottleneck_selection(self):
+        cfg = get_config("qwen3-14b")
+        shape = SHAPES["train_4k"]
+        r = roofline_terms(cfg, shape, flops_per_dev=1e15, bytes_per_dev=1e9,
+                           collective_bytes_per_dev=1e9, n_dev=256)
+        assert r["bottleneck"] == "compute"
+        r2 = roofline_terms(cfg, shape, flops_per_dev=1e12, bytes_per_dev=1e13,
+                            collective_bytes_per_dev=1e9, n_dev=256)
+        assert r2["bottleneck"] == "memory"
+
+    def test_model_flops_train_vs_prefill(self):
+        cfg = get_config("qwen3-0.6b")
+        t = model_flops(cfg, SHAPES["train_4k"])
+        p = model_flops(cfg, SHAPES["prefill_32k"])
+        # same token count (4096*256 == 32768*32); train is 3x forward
+        assert t == pytest.approx(3 * p)
+
+    def test_moe_uses_active_params(self):
+        cfg = get_config("qwen3-moe-30b-a3b")
+        f = model_flops(cfg, SHAPES["train_4k"])
+        n_active = cfg.active_param_count()
+        assert f == pytest.approx(6 * n_active * 4096 * 256)
+        assert n_active < 0.25 * cfg.param_count()
+
+    def test_perf_fraction_bounded_by_useful_ratio(self):
+        cfg = get_config("qwen3-14b")
+        shape = SHAPES["train_4k"]
+        mf = model_flops(cfg, shape)
+        # if HLO flops == model flops and compute-bound, fraction == 1
+        r = roofline_terms(cfg, shape, flops_per_dev=mf / 256,
+                           bytes_per_dev=1.0, collective_bytes_per_dev=1.0,
+                           n_dev=256)
+        assert r["perf_fraction"] == pytest.approx(1.0)
+        assert r["useful_flops_ratio"] == pytest.approx(1.0)

@@ -1,0 +1,174 @@
+"""End-to-end serving integration: real bytes through the object store, real
+JAX compute, ObjectCache reuse correctness and TTFT accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (Delivery, Gateway, InMemoryStore, Policy, RadixIndex)
+from repro.models import build_model
+from repro.serving import Orchestrator, ServingEngine
+from repro.serving.orchestrator import StragglerModel
+
+G = 8  # chunk tokens
+
+
+def _mk_engine(arch="qwen3-0.6b", theta=0, cap=None, hedge=False, sigma=0.0,
+               min_hit_chunks=1):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    spec = cfg.kv_spec(G, dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize)
+    store = InMemoryStore()
+    index = RadixIndex(G)
+    orch = Orchestrator(index, Gateway(store), spec, theta_bytes=theta,
+                        bandwidth_cap=cap, policy=Policy.CAL_STALL_OPT,
+                        min_hit_chunks=min_hit_chunks,
+                        straggler=StragglerModel(sigma=sigma, seed=1),
+                        hedge=hedge)
+    return ServingEngine(model, params, orch), store, index
+
+
+class TestEndToEnd:
+    def test_cache_hit_exact_logits(self):
+        """Logits with ObjectCache prefix reuse == logits from scratch
+        (bytes round-tripped through the store, bit-exact in fp32)."""
+        engine, store, index = _mk_engine()
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, 200, size=48)
+        r1 = engine.submit(prompt, "cold")
+        assert not r1.hit and store.stats.puts > 0
+        # same prompt again: everything but the last chunk is reused
+        r2 = engine.submit(prompt, "warm")
+        assert r2.hit and r2.matched_tokens == 40
+        np.testing.assert_allclose(r2.logits, r1.logits, rtol=1e-4, atol=1e-4)
+
+    def test_diverging_request_reuses_shared_prefix(self):
+        engine, store, _ = _mk_engine()
+        rng = np.random.default_rng(1)
+        shared = rng.integers(0, 200, size=32)
+        a = np.concatenate([shared, rng.integers(0, 200, size=16)])
+        b = np.concatenate([shared, rng.integers(0, 200, size=16)])
+        engine.submit(a, "a")
+        rb = engine.submit(b, "b")
+        assert rb.matched_tokens == 32
+        # correctness vs a fresh engine that never saw request a
+        fresh, *_ = _mk_engine()
+        rf = fresh.submit(b, "fresh")
+        np.testing.assert_allclose(rb.logits, rf.logits, rtol=1e-4, atol=1e-4)
+
+    def test_layerwise_vs_chunkwise_same_logits(self):
+        lw, *_ = _mk_engine(theta=0)  # W >= 0 => always layerwise
+        cw, *_ = _mk_engine(theta=1 << 60)  # W < theta => always chunkwise
+        rng = np.random.default_rng(2)
+        prompt = rng.integers(0, 200, size=40)
+        lw.submit(prompt, "w1"), cw.submit(prompt, "w1")
+        r_lw = lw.submit(prompt, "w2")
+        r_cw = cw.submit(prompt, "w2")
+        assert r_lw.delivery is Delivery.LAYERWISE
+        assert r_cw.delivery is Delivery.CHUNKWISE
+        np.testing.assert_allclose(r_lw.logits, r_cw.logits, rtol=1e-4, atol=1e-4)
+
+    def test_dedup_across_requests(self):
+        engine, store, _ = _mk_engine()
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, 200, size=32)
+        engine.submit(prompt, "a")
+        puts = store.stats.puts
+        engine.submit(prompt, "b")  # chunks already stored: no new objects
+        assert store.stats.puts == puts
+
+    def test_greedy_decode_runs(self):
+        engine, *_ = _mk_engine()
+        rng = np.random.default_rng(4)
+        r = engine.submit(rng.integers(0, 200, size=24), "d", max_new_tokens=4)
+        assert len(r.new_tokens) == 4
+        assert all(0 <= t < engine.cfg.vocab_size for t in r.new_tokens)
+
+    def test_decode_matches_no_cache_decode(self):
+        """Greedy continuation after a cache hit == continuation from scratch."""
+        engine, *_ = _mk_engine()
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, 200, size=32)
+        cold = engine.submit(prompt, "c", max_new_tokens=4)
+        warm = engine.submit(prompt, "w", max_new_tokens=4)
+        assert warm.hit
+        assert cold.new_tokens == warm.new_tokens
+
+    def test_moe_layerwise(self):
+        engine, *_ = _mk_engine("qwen3-moe-30b-a3b")
+        rng = np.random.default_rng(6)
+        prompt = rng.integers(0, 200, size=32)
+        r1 = engine.submit(prompt, "c")
+        r2 = engine.submit(prompt, "w")
+        assert r2.hit and r2.delivery is Delivery.LAYERWISE
+        np.testing.assert_allclose(r2.logits, r1.logits, rtol=1e-4, atol=1e-4)
+
+    def test_llama4_falls_back_to_fused_chunkwise_path(self):
+        engine, *_ = _mk_engine("llama4-maverick-400b-a17b")
+        assert not engine._layerwise_ok
+        rng = np.random.default_rng(7)
+        prompt = rng.integers(0, 200, size=32)
+        r1 = engine.submit(prompt, "c")
+        r2 = engine.submit(prompt, "w")
+        assert r2.hit
+        np.testing.assert_allclose(r2.logits, r1.logits, rtol=1e-4, atol=1e-4)
+
+
+class TestTTFTAccounting:
+    def test_layerwise_ttft_below_chunkwise(self):
+        lw, *_ = _mk_engine(theta=0)
+        cw, *_ = _mk_engine(theta=1 << 60)
+        rng = np.random.default_rng(8)
+        prompt = rng.integers(0, 200, size=48)
+        lw.submit(prompt, "x"), cw.submit(prompt, "x")
+        r_lw = lw.submit(prompt, "y")
+        r_cw = cw.submit(prompt, "y")
+        # chunkwise waits for the full transfer before compute (Fig. 7a)
+        assert r_cw.ttft_model_s >= r_cw.transfer_completion_s
+        assert r_lw.ttft_model_s <= r_cw.ttft_model_s * 1.5 + 0.1
+
+    def test_rate_limit_increases_transfer_time(self):
+        fast, *_ = _mk_engine(theta=0, cap=None)
+        slow, *_ = _mk_engine(theta=0, cap=1e4)  # 10 kB/s cap
+        rng = np.random.default_rng(9)
+        prompt = rng.integers(0, 200, size=48)
+        fast.submit(prompt, "x"), slow.submit(prompt, "x")
+        rf = fast.submit(prompt, "y")
+        rs = slow.submit(prompt, "y")
+        assert rs.transfer_completion_s > rf.transfer_completion_s
+
+    def test_hedging_cuts_straggler_tail(self):
+        """Lognormal storage stragglers: hedged completion stochastically
+        dominates unhedged (paper §6.3 production concern)."""
+        rng = np.random.default_rng(10)
+        prompt = rng.integers(0, 200, size=48)
+        med = []
+        for hedge in (False, True):
+            engine, *_ = _mk_engine(theta=0, hedge=hedge, sigma=1.0)
+            engine.submit(prompt, "x")
+            ts = [engine.submit(prompt, f"y{i}").transfer_completion_s
+                  for i in range(12)]
+            med.append(float(np.mean(ts)))
+        assert med[1] < med[0]
+
+
+class TestFallbacks:
+    def test_small_hit_recomputes(self):
+        engine, _, _ = _mk_engine(min_hit_chunks=3)
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, 200, size=17)  # 2 full chunks -> below min
+        engine.submit(prompt, "a")
+        r = engine.submit(prompt, "b")
+        assert r.delivery is None  # recompute fallback (§6.2)
+        assert engine.orch.stats["fallbacks"] + engine.orch.stats["misses"] >= 1
+
+    def test_full_match_still_computes_last_token(self):
+        engine, *_ = _mk_engine()
+        rng = np.random.default_rng(12)
+        prompt = rng.integers(0, 200, size=32)  # exactly 4 chunks
+        engine.submit(prompt, "a")
+        r = engine.submit(prompt, "b")
+        # match would be 32 tokens; engine must keep >= 1 suffix token
+        assert r.matched_tokens < 32 and r.matched_tokens == 24
