@@ -1,0 +1,40 @@
+"""Compute-or-load crossover (DESIGN.md §Compute-or-load; after Cake,
+arXiv:2410.03065 Fig. 5).
+
+Bandwidth sweep per grid request: pure layerwise fetch degrades as the rate
+cap tightens, pure recompute is rate-independent, and the hybrid planner
+tracks the lower envelope — pure-fetch at high bandwidth, pure-recompute near
+zero, strictly better than both in between.  Emits one row per (request,
+rate) with the three TTFTs and the chosen split; the derived field carries
+``ok=1`` iff hybrid <= min(fetch, recompute) + eps at that point.
+"""
+from __future__ import annotations
+
+from repro.core.simulator import WorkloadRequest
+from repro.hybrid import crossover_sweep
+
+from .common import row
+
+GBPS = 1e9 / 8
+# >= 6 sweep points per the acceptance bar; spans the full crossover.
+SWEEP_GBPS = (0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 100.0)
+EPS = 1e-9
+
+
+def run() -> list[str]:
+    rows = []
+    for ctx, hit in ((4096, 0.5), (16384, 0.875), (65536, 0.875)):
+        w = WorkloadRequest(f"{ctx}/{hit}", ctx, hit, 64)
+        sweep = crossover_sweep(w, [g * GBPS for g in SWEEP_GBPS])
+        for gbps, r in zip(SWEEP_GBPS, sweep):
+            ok = r["hybrid_s"] <= min(r["fetch_s"], r["recompute_s"]) + EPS
+            rows.append(row(
+                f"hybrid/{ctx//1024}K/h{hit}/rate{gbps}G",
+                r["hybrid_s"] * 1e6,
+                f"fetch_us={r['fetch_s']*1e6:.0f};"
+                f"recompute_us={r['recompute_s']*1e6:.0f};"
+                f"m={r['fetch_chunks']}/{r['total_chunks']};ok={int(ok)}"))
+            if not ok:
+                raise AssertionError(
+                    f"hybrid worse than an endpoint at {ctx}/{hit}@{gbps}G: {r}")
+    return rows

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_bandwidth_sensitivity Fig 14 + Fig 15 (caps and rate sweeps)
   bench_scheduler             Fig 16 + Tables A9/A12 (multi-tenant policies)
   bench_granularity           Table A6 + Fig 3 (recompute vs granularity)
+  bench_hybrid                compute-or-load crossover (Cake-style sweep)
   bench_kernels               Pallas kernels vs oracles
   bench_engine                real serving engine (cold/warm, batching)
 """
@@ -18,13 +19,14 @@ import sys
 import traceback
 
 from . import (bench_aggregation, bench_bandwidth_sensitivity, bench_engine,
-               bench_granularity, bench_kernels, bench_overlap,
+               bench_granularity, bench_hybrid, bench_kernels, bench_overlap,
                bench_request_overhead, bench_scheduler, bench_transport,
                bench_ttft)
 
 MODULES = [bench_transport, bench_request_overhead, bench_aggregation,
            bench_overlap, bench_ttft, bench_bandwidth_sensitivity,
-           bench_scheduler, bench_granularity, bench_kernels, bench_engine]
+           bench_scheduler, bench_granularity, bench_hybrid, bench_kernels,
+           bench_engine]
 
 
 def main() -> None:

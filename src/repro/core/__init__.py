@@ -2,7 +2,7 @@
 # retrieval for KV cache reuse (protocol + scheduling co-design).
 from .aggregation import (DEFAULT_THETA_BYTES, AggResult, StorageServer,
                           select_mode)
-from .compute_model import A100_LLAMA31_8B, PaperComputeModel
+from .compute_model import A100_LLAMA31_8B, MeasuredCompute, PaperComputeModel
 from .descriptor import Descriptor, RdmaTarget, make_descriptor
 from .gateway import Gateway, S3Path
 from .hashing import GENESIS, chunk_keys, extend_keys
@@ -10,7 +10,7 @@ from .layout import (layer_range, pack_chunk, unpack_chunk,
                      unpack_layer_payload, wire_dtype)
 from .object_store import FileStore, InMemoryStore, ObjectStore, TieredStore
 from .overlap import (chunkwise_ttft, layerwise_ttft, per_layer_stalls,
-                      pipeline_ttft, required_bandwidth)
+                      pipeline_ttft, required_bandwidth, steady_pipeline_ttft)
 from .radix import RadixIndex
 from .scheduler import (BandwidthPool, Policy, added_ttft, allocate,
                         per_layer_stall, total_transfer_time)

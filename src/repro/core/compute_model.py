@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from bisect import bisect_left
-from typing import Mapping
+from typing import Mapping, Sequence
 
 # (context_tokens, hit_rate) -> (cached_tokens, total_compute_ms, per_layer_ms,
 #                                required_bw_GBps)   [paper Table A8]
@@ -44,8 +44,25 @@ _A100_FULL_PREFILL_MS = {
 }
 
 
+class ComputeModelBase:
+    """Shared derived quantities of a layer-compute model.
+
+    Subclasses provide ``num_layers``, ``bytes_per_token_per_layer`` and
+    ``layer_compute_s(context, hit_rate)``; everything the scheduler and the
+    compute-or-load planner consume follows from those.
+    """
+
+    def bytes_per_layer(self, context: int, hit_rate: float) -> float:
+        return context * hit_rate * self.bytes_per_token_per_layer
+
+    def required_bw(self, context: int, hit_rate: float) -> float:
+        """B/s for perfect overlap (matches Table A8 'Req. BW' column)."""
+        return self.bytes_per_layer(context, hit_rate) / self.layer_compute_s(
+            context, hit_rate)
+
+
 @dataclasses.dataclass(frozen=True)
-class PaperComputeModel:
+class PaperComputeModel(ComputeModelBase):
     """Table A8-backed compute windows for Llama 3.1 8B on A100."""
 
     num_layers: int = LLAMA31_8B_LAYERS
@@ -59,14 +76,6 @@ class PaperComputeModel:
 
     def layer_compute_s(self, context: int, hit_rate: float) -> float:
         return self.suffix_compute_s(context, hit_rate) / self.num_layers
-
-    def bytes_per_layer(self, context: int, hit_rate: float) -> float:
-        return context * hit_rate * self.bytes_per_token_per_layer
-
-    def required_bw(self, context: int, hit_rate: float) -> float:
-        """B/s for perfect overlap (matches Table A8 'Req. BW' column)."""
-        return self.bytes_per_layer(context, hit_rate) / self.layer_compute_s(
-            context, hit_rate)
 
     # -- quadratic-in-suffix interpolation for off-grid points ---------------
     def _interp(self, context: int, hit_rate: float) -> float:
@@ -87,3 +96,52 @@ class PaperComputeModel:
         t = float(k[0] * x + k[1] * x * x)
         # scale by context ratio for the attention term
         return max(t, 1e-3) / 1e3
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredCompute(ComputeModelBase):
+    """Per-layer prefill-time model fit from *measured* wall-clock times.
+
+    The live serving engine observes real per-layer compute windows (CPU here,
+    TPU in deployment); a linear fit  t(suffix) = base_s + per_token_s·suffix
+    per layer is all the compute-or-load planner needs.  The same interface as
+    :class:`PaperComputeModel` (``layer_compute_s`` / ``suffix_compute_s`` /
+    ``bytes_per_layer``), so the two are interchangeable planner inputs.
+    """
+
+    num_layers: int
+    base_s: float  # fixed per-layer cost (dispatch, norm, MLP ramp)
+    per_token_s: float  # marginal per-suffix-token per-layer cost
+    bytes_per_token_per_layer: int = LLAMA31_8B_BYTES_PER_TOKEN_PER_LAYER
+
+    @classmethod
+    def fit(cls, samples: Sequence[tuple[int, float]], num_layers: int,
+            bytes_per_token_per_layer: int = LLAMA31_8B_BYTES_PER_TOKEN_PER_LAYER
+            ) -> "MeasuredCompute":
+        """Least-squares fit of per-layer seconds vs suffix-token count.
+
+        ``samples`` are (suffix_tokens, per_layer_seconds) measurements, e.g.
+        one per warm request from ``ServingEngine`` compute timings.
+        """
+        import numpy as np
+        if not samples:
+            raise ValueError("MeasuredCompute.fit needs >= 1 measurement")
+        xs = np.array([s for s, _ in samples], dtype=float)
+        ys = np.array([t for _, t in samples], dtype=float)
+        if len(samples) == 1:  # no intercept identifiable from one point
+            per_token = float(ys[0] / max(xs[0], 1.0))
+            return cls(num_layers, 0.0, per_token, bytes_per_token_per_layer)
+        A = np.stack([np.ones_like(xs), xs], axis=1)
+        base, per_token = np.linalg.lstsq(A, ys, rcond=None)[0]
+        return cls(num_layers, max(float(base), 0.0),
+                   max(float(per_token), 0.0), bytes_per_token_per_layer)
+
+    def layer_compute_s(self, context: int, hit_rate: float) -> float:
+        # Floored like PaperComputeModel (1 us): a zero window would blow up
+        # required_bw and FlowRequest.zero_stall_rate, and fit() can clamp
+        # both coefficients to 0 (full hit + zero intercept).
+        suffix = context * (1.0 - hit_rate)
+        return max(self.base_s + self.per_token_s * suffix, 1e-6)
+
+    def suffix_compute_s(self, context: int, hit_rate: float) -> float:
+        return self.num_layers * self.layer_compute_s(context, hit_rate)

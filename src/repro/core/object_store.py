@@ -171,6 +171,7 @@ class TieredStore(ObjectStore):
         self._hot: "collections.OrderedDict[bytes, bytes]" = collections.OrderedDict()
         self._hot_bytes = 0
         self._lock = threading.RLock()
+        self.stats = StoreStats()
         self.hot_hits = 0
         self.hot_misses = 0
 
@@ -188,31 +189,52 @@ class TieredStore(ObjectStore):
                 self._hot_bytes -= len(victim)
 
     def put(self, key: bytes, data: bytes) -> None:
+        dup = self.cold.contains(key)  # immutable content-addressed store
         self.cold.put(key, data)
+        if dup:
+            self.stats.dedup_hits += 1
+        else:
+            self.stats.puts += 1
+            self.stats.bytes_written += len(data)
         if self.populate_on_write:
             self._admit(key, bytes(data))
 
     def get(self, key: bytes) -> bytes:
+        self.stats.gets += 1
         with self._lock:
             hit = self._hot.get(key)
             if hit is not None:
                 self._hot.move_to_end(key)
                 self.hot_hits += 1
+                self.stats.bytes_read += len(hit)
                 return hit
         self.hot_misses += 1
         data = self.cold.get(key)
         self._admit(key, data)
+        self.stats.bytes_read += len(data)
         return data
 
     def range_get(self, key: bytes, offset: int, length: int) -> bytes:
+        self.stats.range_gets += 1
         with self._lock:
             hit = self._hot.get(key)
             if hit is not None:
                 self._hot.move_to_end(key)
                 self.hot_hits += 1
+                self.stats.bytes_read += length
                 return hit[offset:offset + length]
         self.hot_misses += 1
-        return self.cold.range_get(key, offset, length)
+        # Promote the *whole* object, not just the requested range: layerwise
+        # retrieval issues L range reads against the same chunk, so serving
+        # the miss from cold without admitting would defeat the hot tier for
+        # exactly the access pattern it exists for.  But an object that can
+        # never be admitted must not be amplified into L full-object reads.
+        self.stats.bytes_read += length
+        if self.cold.object_size(key) > self.hot_capacity:
+            return self.cold.range_get(key, offset, length)
+        data = self.cold.get(key)
+        self._admit(key, data)
+        return data[offset:offset + length]
 
     def contains(self, key: bytes) -> bool:
         with self._lock:

@@ -60,3 +60,21 @@ def per_layer_stalls(ready_s: Sequence[float], compute_s: Sequence[float]) -> li
 def required_bandwidth(bytes_per_layer: float, layer_compute_s: float) -> float:
     """B_req = D^(l) / t^(l) (§5.3) — throughput for perfect overlap."""
     return bytes_per_layer / layer_compute_s
+
+
+def steady_pipeline_ttft(num_layers: int, first_s: float, stage_s: float,
+                         layer_compute_s: float) -> float:
+    """Closed form of Eq. 3 for a *steady* pipeline: layer l is ready at
+    ``first_s + l·stage_s`` and every layer computes for ``layer_compute_s``:
+
+        T = first + (L-1)·max(stage, C) + C.
+
+    Equals ``pipeline_ttft([first + l*stage], [C]*L)``; the compute-or-load
+    planner (DESIGN.md §Compute-or-load) uses this form because both its
+    transfer cadence and its compute window are constant across layers for a
+    fixed split point.
+    """
+    if num_layers == 0:
+        return 0.0
+    return (first_s + (num_layers - 1) * max(stage_s, layer_compute_s)
+            + layer_compute_s)

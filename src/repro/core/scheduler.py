@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Iterable, Mapping, Sequence
+from typing import Callable, Iterable, Mapping, Optional, Sequence
 
 from .types import FlowRequest
 
@@ -43,7 +43,10 @@ def zero_stall_rate(req: FlowRequest) -> float:
 
 
 def per_layer_stall(req: FlowRequest, rate: float) -> float:
-    """tau_i(r_i) (Eq. 4)."""
+    """tau_i(r_i) (Eq. 4).  A zero-byte flow (a hybrid request re-planned to
+    pure recompute) never stalls, whatever its rate."""
+    if req.bytes_per_layer == 0:
+        return 0.0
     if rate <= 0:
         return math.inf
     return max(0.0, req.bytes_per_layer / rate - req.layer_compute_s)
@@ -52,6 +55,8 @@ def per_layer_stall(req: FlowRequest, rate: float) -> float:
 def added_ttft(req: FlowRequest, rate: float) -> float:
     """Stall accumulated over the L-1 overlapped stages of Eq. 3 plus the
     first-layer exposure — the scheduler-visible part of added TTFT."""
+    if req.bytes_per_layer == 0:
+        return 0.0
     if rate <= 0:
         return math.inf
     x = req.bytes_per_layer / rate
@@ -104,9 +109,13 @@ def allocate(requests: Sequence[FlowRequest], budget: float, policy: Policy,
         return {r.req_id: budget / n for r in requests}
     if policy is Policy.KV_PROP:
         total = sum(r.total_bytes for r in requests)
+        if total == 0.0:  # all-zero demand: proportionality is undefined
+            return allocate(requests, budget, Policy.EQUAL)
         return {r.req_id: budget * r.total_bytes / total for r in requests}
     if policy is Policy.BW_PROP:
         total = sum(r.zero_stall_rate for r in requests)
+        if total == 0.0:  # zero slack everywhere: fall back to an even split
+            return allocate(requests, budget, Policy.EQUAL)
         return {r.req_id: budget * r.zero_stall_rate / total for r in requests}
     delta = margin if policy is Policy.CAL_STALL_OPT else 0.0
     caps = {r.req_id: r.zero_stall_rate + delta for r in requests}
@@ -132,6 +141,7 @@ class _Flow:
     req: FlowRequest
     rate: float
     remaining_bytes: float
+    done_reported: bool = False
 
 
 class BandwidthPool:
@@ -141,18 +151,33 @@ class BandwidthPool:
     epoch boundary* rather than being redistributed immediately — per-request
     transfer times stay predictable, so the serving node never reacts to
     unexpected bandwidth changes mid-epoch.
+
+    ``replanner`` is the compute-or-load hook (DESIGN.md §Compute-or-load):
+    called as ``replanner(req, rate)`` for every *newly admitted* flow whose
+    water-filled rate fell below its zero-stall rate, it may return a reduced
+    ``FlowRequest`` (same ``req_id``, fewer demanded bytes, longer compute
+    window) for a hybrid fetch+recompute split — the request then asks for
+    less bandwidth instead of stalling.  Returning ``None`` keeps the flow
+    unchanged.  Demands only ever shrink, so one re-allocation round after
+    re-planning can only raise the other flows' rates.
     """
 
     def __init__(self, budget: float, policy: Policy = Policy.CAL_STALL_OPT,
-                 margin: float = 0.0, epoch_s: float = 0.1) -> None:
+                 margin: float = 0.0, epoch_s: float = 0.1,
+                 replanner: Optional[Callable[[FlowRequest, float],
+                                              Optional[FlowRequest]]] = None
+                 ) -> None:
         self.budget = budget
         self.policy = policy
         self.margin = margin
         self.epoch_s = epoch_s
+        self.replanner = replanner
         self._flows: dict[str, _Flow] = {}
         self._pending: list[FlowRequest] = []
+        self._pending_done: list[str] = []
         self._epoch_start = 0.0
         self.epochs = 0
+        self.replans = 0
 
     def submit(self, req: FlowRequest) -> None:
         self._pending.append(req)
@@ -165,14 +190,57 @@ class BandwidthPool:
         self._epoch_start = now
         self.epochs += 1
         live = [f.req for f in self._flows.values() if f.remaining_bytes > 0]
-        admitted = live + self._pending
+        live_ids = {r.req_id for r in live}
+        # Deduplicate re-submissions: a pending duplicate of a live flow must
+        # not be admitted twice (it would double-count in `allocate` and
+        # clobber the flow's transfer state); later duplicates within the
+        # pending list lose to the first.
+        fresh: list[FlowRequest] = []
+        seen: set[str] = set()
+        for req in self._pending:
+            if req.req_id in live_ids or req.req_id in seen:
+                continue
+            fresh.append(req)
+            seen.add(req.req_id)
         self._pending = []
+        # Flows that completed but were never surfaced by advance() (e.g. a
+        # zero-byte pure-recompute flow when epochs turn over back-to-back)
+        # must not vanish: queue their completion for the next advance() —
+        # unless the same id is being re-admitted fresh right now, in which
+        # case the restart supersedes the old completion (reporting it would
+        # make the in-flight new transfer look done).
+        self._pending_done = [fid for fid in self._pending_done
+                              if fid not in seen]
+        for fid, f in self._flows.items():
+            if f.remaining_bytes <= 0 and not f.done_reported:
+                f.done_reported = True
+                if fid not in seen:
+                    self._pending_done.append(fid)
+        admitted = live + fresh
         alloc = allocate(admitted, self.budget, self.policy, self.margin)
+        if self.replanner is not None:
+            replanned = False
+            for i, req in enumerate(admitted):
+                if req.req_id in live_ids:  # split is fixed once a fetch starts
+                    continue
+                rate = alloc[req.req_id]
+                if rate >= req.zero_stall_rate * (1.0 - 1e-9):
+                    continue
+                new = self.replanner(req, rate)
+                if new is not None and new.req_id == req.req_id \
+                        and new.total_bytes < req.total_bytes:
+                    admitted[i] = new
+                    replanned = True
+                    self.replans += 1
+            if replanned:
+                alloc = allocate(admitted, self.budget, self.policy, self.margin)
         old = self._flows
         self._flows = {}
         for req in admitted:
-            prev = old.get(req.req_id)
-            rem = prev.remaining_bytes if prev else req.total_bytes
+            if req.req_id in live_ids:
+                rem = old[req.req_id].remaining_bytes
+            else:  # fresh flow (or a finished flow re-submitted: restart it)
+                rem = req.total_bytes
             self._flows[req.req_id] = _Flow(req, alloc[req.req_id], rem)
         return alloc
 
@@ -182,12 +250,21 @@ class BandwidthPool:
         Completed flows keep holding their bandwidth until the next
         ``start_epoch`` (the paper's conservative rule).
         """
-        done = []
+        done = list(self._pending_done)
+        self._pending_done.clear()
         for fid, f in self._flows.items():
             if f.remaining_bytes <= 0:
+                # Completion is reported exactly once — including flows that
+                # were admitted with zero bytes (a hybrid request re-planned
+                # to pure recompute transfers nothing but must still
+                # complete, or its caller waits forever).
+                if not f.done_reported:
+                    f.done_reported = True
+                    done.append(fid)
                 continue
             f.remaining_bytes -= f.rate * dt
             if f.remaining_bytes <= 0:
                 f.remaining_bytes = 0.0
+                f.done_reported = True
                 done.append(fid)
         return done

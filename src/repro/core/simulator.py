@@ -81,15 +81,11 @@ class ServingSimulator:
         L = spec.num_layers
         c = self.compute.layer_compute_s(w.context, w.hit_rate)
 
-        startup = profile.control_plane_s + profile.per_object_s * n_chunks
+        # 3-stage pipeline per layer (storage read -> assemble -> wire).
+        startup, first, stage = profile.stage_times(n_chunks, layer_bytes,
+                                                    rate_limit)
         if session_setup and profile is not LOCAL_DRAM:
             startup += RDMA_SESSION_SETUP_S
-        # 3-stage pipeline per layer (storage read -> assemble -> wire).
-        io = profile.storage.io_time(n_chunks, layer_bytes)
-        asm = profile.storage.assemble_time(layer_bytes)
-        wire = profile.wire_time(layer_bytes, rate_limit)
-        stage = max(io, asm, wire)  # steady-state per-layer cadence
-        first = io + asm + wire  # fill latency of layer 0
         ready = [startup + first + l * stage for l in range(L)]
         compute = [c] * L
         ttft = pipeline_ttft(ready, compute)
@@ -108,6 +104,15 @@ class ServingSimulator:
         L = spec.num_layers
         return TTFTResult(w.req_id, ttft, timing.control_plane_s,
                           timing.total_s / L, c_total / L, stalled=True)
+
+    def ttft_recompute(self, w: WorkloadRequest) -> TTFTResult:
+        """Pure-recompute baseline: ignore the cache hit entirely and prefill
+        the whole context from scratch (no transfer, no startup) — the m=0
+        endpoint of the compute-or-load planner."""
+        c_total = self.compute.suffix_compute_s(w.context, 0.0)
+        L = self.compute.num_layers
+        return TTFTResult(w.req_id, c_total, 0.0, 0.0, c_total / L,
+                          stalled=False)
 
     def ttft_opt_local(self, w: WorkloadRequest) -> float:
         """opt-local-LW baseline (§5.5): pre-aggregated layer-major KV in

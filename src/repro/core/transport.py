@@ -91,6 +91,20 @@ class TransportProfile:
             t += nbytes / self.staging_bandwidth
         return t
 
+    def stage_times(self, n_objects: int, payload_bytes: int,
+                    rate_limit: Optional[float] = None
+                    ) -> tuple[float, float, float]:
+        """(startup, first, stage) of the 3-stage layerwise pipeline
+        (storage read -> assemble -> wire): ``startup`` is the fixed
+        control-plane cost, ``first`` the fill latency of layer 0, ``stage``
+        the steady-state per-layer cadence.  Shared by the TTFT simulator and
+        the compute-or-load planner so the two can never drift apart."""
+        startup = self.control_plane_s + self.per_object_s * n_objects
+        io = self.storage.io_time(n_objects, payload_bytes)
+        asm = self.storage.assemble_time(payload_bytes)
+        wire = self.wire_time(payload_bytes, rate_limit)
+        return startup, io + asm + wire, max(io, asm, wire)
+
     # -- single / batched object timing (non-aggregated paths) ---------------
     def single_get(self, nbytes: int, rate_limit: Optional[float] = None) -> Timing:
         return Timing(

@@ -21,10 +21,17 @@ KiB = 1024
 
 
 class Delivery(enum.Enum):
-    """Delivery order requested by a descriptor (paper Table 1, §3.4)."""
+    """Delivery order requested by a descriptor (paper Table 1, §3.4).
+
+    ``HYBRID`` is a *serving-side* mode (DESIGN.md §Compute-or-load): the
+    fetch-span of a prefix travels LAYERWISE while the rest is recomputed on
+    the GPU.  Descriptors never carry it — the fetched span is an ordinary
+    layerwise descriptor for a shorter prefix.
+    """
 
     CHUNKWISE = "chunkwise"
     LAYERWISE = "layerwise"
+    HYBRID = "hybrid"
 
 
 @dataclasses.dataclass(frozen=True)

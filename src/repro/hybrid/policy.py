@@ -1,0 +1,70 @@
+"""Bandwidth-aware re-planning policy (DESIGN.md §Compute-or-load).
+
+`core.scheduler.BandwidthPool` water-fills a shared cap across layerwise
+flows; a flow whose allocated rate lands below its zero-stall rate r* = s/c
+would stall the GPU every layer (Eq. 4).  The hybrid answer: shrink the
+request instead — re-plan the compute-or-load split at the offered rate, so
+the flow demands fewer bytes per layer (smaller s) over a longer compute
+window (larger c, the recompute-span joined the suffix).  Its zero-stall rate
+drops on both counts and the pool's pressure falls for everyone.
+
+`HybridReplanner` is the ``replanner`` callable `BandwidthPool` accepts.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.transport import TransportProfile
+from repro.core.types import FlowRequest, KVSpec
+
+from .planner import plan_split
+
+
+@dataclasses.dataclass
+class HybridReplanner:
+    """Maps a stalling `FlowRequest` to a reduced hybrid demand.
+
+    A `FlowRequest` carries only (s_i, c_i, L); the planner also needs the
+    request's context length, so callers :meth:`register` it per ``req_id``
+    (the orchestrator knows it at plan time).  The registry is an LRU bounded
+    at ``max_contexts`` — a long-lived pool never accumulates entries even if
+    nobody calls :meth:`unregister`; re-registering a reused ``req_id``
+    overwrites the stale prompt length.  Tidy callers may still
+    :meth:`unregister` on flow completion (the ids `BandwidthPool.advance`
+    returns).
+    """
+
+    compute: object  # PaperComputeModel / MeasuredCompute
+    profile: TransportProfile
+    spec: KVSpec
+    contexts: Dict[str, int] = dataclasses.field(
+        default_factory=collections.OrderedDict)
+    max_contexts: int = 4096
+    session_setup: bool = True
+    method: str = "closed_form"
+
+    def register(self, req_id: str, context_tokens: int) -> None:
+        self.contexts.pop(req_id, None)
+        self.contexts[req_id] = context_tokens
+        while len(self.contexts) > self.max_contexts:
+            self.contexts.pop(next(iter(self.contexts)))
+
+    def unregister(self, req_id: str) -> None:
+        self.contexts.pop(req_id, None)
+
+    def __call__(self, req: FlowRequest, rate: float) -> Optional[FlowRequest]:
+        context = self.contexts.get(req.req_id)
+        if context is None or rate <= 0.0:
+            return None
+        n = int(round(req.bytes_per_layer / self.spec.per_layer_chunk_bytes))
+        if n <= 0:
+            return None
+        split = plan_split(context, n, self.spec, self.compute, self.profile,
+                           rate, session_setup=self.session_setup,
+                           method=self.method)
+        if split.is_pure_fetch:
+            return None  # fetching everything is still optimal at this rate
+        return FlowRequest(req.req_id, split.bytes_per_layer,
+                           split.layer_compute_s, req.num_layers)

@@ -17,6 +17,10 @@ logits are bit-for-bit equal to a no-cache prefill.
 Families: dense/vlm/moe(homogeneous) stream layerwise; ssm/hybrid reuse
 fixed-size state snapshots (fused path; see DESIGN.md §Arch-applicability);
 llama4-style alternating MoE uses the fused path as well.
+
+When the orchestrator carries a compute-or-load planner, `_serve_hybrid`
+fetches only the planner's fetch-span and recomputes the rest with the suffix
+(DESIGN.md §Compute-or-load).
 """
 from __future__ import annotations
 
@@ -31,6 +35,7 @@ import numpy as np
 from repro.core import Delivery
 from repro.core.hashing import chunk_keys
 from repro.core.overlap import per_layer_stalls, pipeline_ttft
+from repro.hybrid.executor import HybridPlan, fetch_span_plan
 from repro.models import Model
 from repro.models import dense, moe
 from repro.models import layers as nn
@@ -140,6 +145,17 @@ class ServingEngine:
 
         if not use_cache:
             result = self._serve_full(tokens, req_id)
+        elif isinstance(plan, HybridPlan):
+            if self._layerwise_ok:
+                result = self._serve_hybrid(tokens, plan, n_chunks, req_id)
+            else:
+                # Fused families cannot overlap, but the split still governs
+                # how many bytes move: fetch the fetch-span as whole chunks
+                # and recompute the rest with the suffix.
+                span = fetch_span_plan(plan, n_chunks, self.spec)
+                m = span.match.num_chunks
+                result = self._serve_chunkwise(
+                    tokens, span, m, m * self.spec.chunk_tokens, req_id)
         elif plan.delivery is Delivery.LAYERWISE and self._layerwise_ok:
             result = self._serve_layerwise(tokens, plan, n_chunks, P, req_id)
         else:
@@ -210,6 +226,23 @@ class ServingEngine:
         return RequestResult(req_id, lg, [], P, Delivery.LAYERWISE, ttft,
                              sum(compute_times) + final_dt, res.completion_s,
                              stalls)
+
+    def _serve_hybrid(self, tokens, plan: HybridPlan, n_chunks, req_id
+                      ) -> RequestResult:
+        """Compute-or-load split (DESIGN.md §Compute-or-load): fetch chunks
+        [0, m) layerwise while chunks [m, n) are recomputed as part of the
+        suffix prefill.  The per-layer loop of `_serve_layerwise` already
+        overlaps the two — each layer's recompute-span attention runs while
+        later layers' payloads are still in flight — so the fetch-span rides
+        it unchanged with a shorter prefix."""
+        m = min(plan.fetch_chunks, n_chunks)
+        if m <= 0:  # planner chose pure recompute: identical to a cache miss
+            return self._serve_full(tokens, req_id)
+        span = fetch_span_plan(plan, n_chunks, self.spec)
+        F = m * self.spec.chunk_tokens
+        result = self._serve_layerwise(tokens, span, m, F, req_id)
+        result.delivery = Delivery.HYBRID
+        return result
 
     # ------------------------------------------------------------------
     def _trim_plan(self, plan, n_chunks):

@@ -10,15 +10,19 @@ paper §6.2 when the hit is too small to amortise S3 overheads.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from repro.hybrid.planner import HybridPlanner
 
 from repro.core import (Delivery, FlowRequest, Gateway, KVSpec, Policy,
                         RadixIndex, make_descriptor, select_mode)
 from repro.core.aggregation import DEFAULT_THETA_BYTES, AggResult
 from repro.core.scheduler import allocate
 from repro.core.types import MatchResult
+from repro.hybrid.executor import HybridPlan, fetch_span_plan
 
 
 @dataclasses.dataclass
@@ -59,7 +63,8 @@ class Orchestrator:
                  policy: Policy = Policy.CAL_STALL_OPT,
                  margin: float = 0.0,
                  straggler: Optional[StragglerModel] = None,
-                 hedge: bool = False) -> None:
+                 hedge: bool = False,
+                 hybrid: Optional["HybridPlanner"] = None) -> None:
         self.index = index
         self.gateway = gateway
         self.spec = spec
@@ -70,7 +75,9 @@ class Orchestrator:
         self.margin = margin
         self.straggler = straggler or StragglerModel()
         self.hedge = hedge
-        self.stats = {"hits": 0, "misses": 0, "fallbacks": 0, "hedged": 0}
+        self.hybrid = hybrid
+        self.stats = {"hits": 0, "misses": 0, "fallbacks": 0, "hedged": 0,
+                      "hybrid_splits": 0}
 
     # -- planning ------------------------------------------------------------
     def plan(self, tokens, layer_compute_s: float,
@@ -80,7 +87,6 @@ class Orchestrator:
         if match.num_chunks < self.min_hit_chunks:
             self.stats["misses" if not match.is_hit else "fallbacks"] += 1
             return TransferPlan(match, None, None)
-        self.stats["hits"] += 1
         W = self.spec.matched_payload_bytes(match.num_chunks)
         delivery = select_mode(W, self.theta)
         rate = None
@@ -90,11 +96,30 @@ class Orchestrator:
                              layer_compute_s, self.spec.num_layers)
             flows = [me, *(active or [])]
             rate = allocate(flows, self.cap, self.policy, self.margin)[req_id]
+        if self.hybrid is not None and delivery is Delivery.LAYERWISE:
+            split = self.hybrid.plan(len(tokens), match.num_chunks, self.spec,
+                                     rate)
+            if split.is_pure_recompute:
+                # Fetching nothing is a recompute fallback (§6.2), not a hit.
+                self.stats["fallbacks"] += 1
+                return TransferPlan(match, None, None)
+            if not split.is_pure_fetch:
+                self.stats["hits"] += 1
+                self.stats["hybrid_splits"] += 1
+                return HybridPlan(match, Delivery.LAYERWISE, rate,
+                                  hedged=self.hedge,
+                                  fetch_chunks=split.fetch_chunks, split=split)
+        self.stats["hits"] += 1
         return TransferPlan(match, delivery, rate, hedged=self.hedge)
 
     # -- execution ------------------------------------------------------------
     def fetch(self, plan: TransferPlan) -> AggResult:
         assert plan.delivery is not None
+        if isinstance(plan, HybridPlan):
+            # Only the fetch-span travels; the recompute-span was planned to
+            # stay on the GPU, so fetching the untrimmed match would move
+            # exactly the bytes the planner decided not to.
+            plan = fetch_span_plan(plan, plan.fetch_chunks, self.spec)
         desc = make_descriptor(list(plan.match.chunk_keys), self.spec,
                                plan.delivery)
         self.index.pin(plan.match.chunk_keys)

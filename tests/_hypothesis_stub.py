@@ -1,0 +1,94 @@
+"""Minimal stand-in for `hypothesis` when the real package is absent.
+
+The container this repo is developed in does not ship hypothesis and nothing
+may be pip-installed, so property tests fall back to seeded random sampling:
+``@given`` draws ``max_examples`` pseudo-random examples from the declared
+strategies and runs the test body once per example.  Deterministic (fixed
+seed) so failures reproduce.  Only the strategy surface this repo uses is
+implemented: integers, floats, lists, tuples, sampled_from.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any]) -> None:
+        self._sample = sample
+
+    def example(self, rng: random.Random) -> Any:
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    # Mix uniform and log-uniform draws so wide ranges (e.g. 1e3..1e12) still
+    # exercise their small end, as hypothesis would.
+    def sample(rng: random.Random) -> float:
+        if min_value > 0 and max_value / min_value > 1e3 and rng.random() < 0.5:
+            import math
+            return math.exp(rng.uniform(math.log(min_value), math.log(max_value)))
+        return rng.uniform(min_value, max_value)
+    return _Strategy(sample)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(lambda rng: [elements.example(rng)
+                                  for _ in range(rng.randint(min_size, max_size))])
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+def sampled_from(seq: Sequence[Any]) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                fn(*args, *(s.example(rng) for s in strategies), **kwargs)
+        # Hide the strategy-filled parameters from pytest's fixture resolution
+        # (real hypothesis does the same): expose only the leading params.
+        import inspect
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params[:len(params) - len(strategies)])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this stub as `hypothesis` + `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "sampled_from"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

@@ -200,6 +200,41 @@ class TestStores:
         t.get(b"a" * 16)
         assert t.hot_misses == 3
 
+    def test_tiered_range_get_promotes_whole_object(self):
+        """Layerwise reads issue L range gets per chunk; the first miss must
+        admit the whole object so the remaining L-1 reads hit the hot tier."""
+        cold = InMemoryStore()
+        t = TieredStore(cold, hot_capacity_bytes=64, populate_on_write=False)
+        t.put(b"a" * 16, b"0123456789abcdef")
+        assert t.range_get(b"a" * 16, 0, 4) == b"0123"  # miss -> promote
+        assert t.hot_misses == 1
+        assert t.range_get(b"a" * 16, 4, 4) == b"4567"
+        assert t.range_get(b"a" * 16, 12, 4) == b"cdef"
+        assert t.hot_hits == 2 and t.hot_misses == 1
+        assert cold.stats.gets == 1 and cold.stats.range_gets == 0
+
+    def test_tiered_range_get_oversized_object_not_admitted(self):
+        """An object the hot tier can never hold keeps using cheap cold
+        range reads — no full-object read amplification."""
+        cold = InMemoryStore()
+        t = TieredStore(cold, hot_capacity_bytes=4, populate_on_write=False)
+        t.put(b"a" * 16, b"0123456789abcdef")  # larger than the hot tier
+        assert t.range_get(b"a" * 16, 0, 4) == b"0123"
+        assert t.range_get(b"a" * 16, 4, 4) == b"4567"
+        assert t.hot_misses == 2 and t.hot_hits == 0
+        assert cold.stats.range_gets == 2 and cold.stats.gets == 0
+
+    def test_tiered_store_stats(self):
+        t = TieredStore(InMemoryStore(), hot_capacity_bytes=64)
+        t.put(b"a" * 16, b"xxxx")
+        t.put(b"a" * 16, b"xxxx")  # deduplicated by the cold tier
+        t.get(b"a" * 16)
+        t.range_get(b"a" * 16, 0, 2)
+        snap = t.stats.snapshot()
+        assert snap["puts"] == 1 and snap["dedup_hits"] == 1
+        assert snap["gets"] == 1 and snap["range_gets"] == 1
+        assert snap["bytes_written"] == 4 and snap["bytes_read"] == 6
+
 
 # ---------------------------------------------------------------------------
 # server-side aggregation (Table A3)

@@ -34,6 +34,12 @@ def test_layerwise_overlap():
     assert "B_req" in out
 
 
+def test_hybrid_prefill():
+    out = _run_example("hybrid_prefill.py")
+    assert "OK: hybrid <= min(pure-fetch, pure-recompute)" in out
+    assert "OK: hybrid-prefill logits == no-cache logits" in out
+
+
 @pytest.mark.slow
 def test_train_ft():
     out = _run_example("train_ft.py")

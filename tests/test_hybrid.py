@@ -1,0 +1,359 @@
+"""Compute-or-load hybrid prefill (DESIGN.md §Compute-or-load).
+
+Planner: endpoint correctness against the layerwise simulator and the
+full-prefill compute model, closed-form == exhaustive, monotone Cake-style
+crossover under a bandwidth sweep.  Policy: the BandwidthPool re-planning
+hook shrinks stalling flows.  Engine: `_serve_hybrid` logits are bit-for-bit
+equal to a no-cache prefill on smollm-135m.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (BandwidthPool, Delivery, FlowRequest, Gateway,
+                        InMemoryStore, MeasuredCompute, PaperComputeModel,
+                        Policy, RadixIndex)
+from repro.core.scheduler import per_layer_stall
+from repro.core.simulator import ServingSimulator, WorkloadRequest
+from repro.core.transport import LOCAL_DRAM, S3_RDMA_AGG, S3_TCP
+from repro.hybrid import (HybridPlanner, HybridReplanner, crossover_sweep,
+                          hybrid_workload_ttft, plan_split, validate_split)
+from repro.models import build_model
+from repro.serving import Orchestrator, ServingEngine
+
+GBPS = 1e9 / 8
+GRID = [(4096, 0.5), (16384, 0.875), (32768, 0.5), (65536, 0.875)]
+RATES = [0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 100.0]  # Gbps
+
+
+def _setup(ctx, hit, G=64):
+    sim = ServingSimulator()
+    w = WorkloadRequest(f"{ctx}/{hit}", ctx, hit, G)
+    return sim, w, sim.kv_spec(G), w.cached_tokens // G
+
+
+class TestPlannerEndpoints:
+    @pytest.mark.parametrize("ctx,hit", GRID)
+    def test_pure_fetch_endpoint_equals_layerwise_ttft(self, ctx, hit):
+        """T(n) must equal the simulator's pure layerwise path exactly."""
+        sim, w, spec, n = _setup(ctx, hit)
+        m = PaperComputeModel()
+        for rate in (None, 1.0 * GBPS, 8.0 * GBPS):
+            split = plan_split(ctx, n, spec, m, S3_RDMA_AGG, rate)
+            want = sim.ttft_layerwise(w, S3_RDMA_AGG, rate_limit=rate).ttft_s
+            assert split.fetch_ttft_s == pytest.approx(want, abs=1e-12)
+
+    @pytest.mark.parametrize("ctx,hit", GRID)
+    def test_pure_recompute_endpoint_equals_full_prefill(self, ctx, hit):
+        """T(0) must equal the full-context prefill compute time."""
+        sim, w, spec, n = _setup(ctx, hit)
+        m = PaperComputeModel()
+        split = plan_split(ctx, n, spec, m, S3_RDMA_AGG, 1.0 * GBPS)
+        assert split.recompute_ttft_s == pytest.approx(
+            m.suffix_compute_s(ctx, 0.0), rel=1e-12)
+        assert split.recompute_ttft_s == pytest.approx(
+            sim.ttft_recompute(w).ttft_s, rel=1e-12)
+
+    def test_split_accounting(self):
+        _, _, spec, n = _setup(16384, 0.875)
+        split = plan_split(16384, n, spec, PaperComputeModel(), S3_RDMA_AGG,
+                           1.0 * GBPS)
+        assert 0 <= split.fetch_chunks <= n
+        assert split.recompute_chunks == n - split.fetch_chunks
+        assert split.bytes_per_layer == \
+            split.fetch_chunks * spec.per_layer_chunk_bytes
+
+
+class TestPlannerOptimality:
+    @pytest.mark.parametrize("ctx,hit", GRID)
+    def test_hybrid_never_worse_than_either_endpoint(self, ctx, hit):
+        _, _, spec, n = _setup(ctx, hit)
+        m = PaperComputeModel()
+        for rate in RATES:
+            s = plan_split(ctx, n, spec, m, S3_RDMA_AGG, rate * GBPS)
+            assert s.ttft_s <= min(s.fetch_ttft_s, s.recompute_ttft_s) + 1e-12
+
+    @pytest.mark.parametrize("ctx,hit", GRID)
+    @pytest.mark.parametrize("profile", [S3_RDMA_AGG, S3_TCP, LOCAL_DRAM],
+                             ids=lambda p: p.name)
+    def test_closed_form_matches_exhaustive(self, ctx, hit, profile):
+        """The closed form is exact: the objective is convex on [1, n]."""
+        _, _, spec, n = _setup(ctx, hit)
+        m = PaperComputeModel()
+        for rate in (None, 0.25 * GBPS, 1.0 * GBPS, 8.0 * GBPS, 64.0 * GBPS):
+            cf, ex = validate_split(ctx, n, spec, m, profile, rate)
+            assert cf.ttft_s == pytest.approx(ex.ttft_s, abs=1e-12), \
+                (profile.name, rate, cf.fetch_chunks, ex.fetch_chunks)
+
+    def test_closed_form_also_exact_for_measured_compute(self):
+        spec = ServingSimulator().kv_spec(64)
+        m = MeasuredCompute(num_layers=32, base_s=1e-5, per_token_s=2e-6,
+                            bytes_per_token_per_layer=4096)
+        for rate in RATES:
+            cf, ex = validate_split(16384, 224, spec, m, S3_RDMA_AGG,
+                                    rate * GBPS)
+            assert cf.ttft_s == pytest.approx(ex.ttft_s, abs=1e-12)
+
+    @pytest.mark.parametrize("compute", [
+        PaperComputeModel(),
+        MeasuredCompute(num_layers=32, base_s=1e-5, per_token_s=2e-6,
+                        bytes_per_token_per_layer=4096)],
+        ids=["paper", "measured"])
+    def test_closed_form_exact_off_grid(self, compute):
+        """Regression: bimodal objectives (concave interpolated compute) and
+        fp-noise quadratic coefficients (linear compute) once sent the
+        closed form to splits up to 7x worse than optimal at G=16 full
+        matches; it must match the exhaustive scan everywhere."""
+        from repro.core.types import KVSpec
+        for ctx, G, hitfrac in ((32768, 16, 1.0), (65536, 16, 1.0),
+                                (65536, 16, 0.5), (65536, 256, 0.875)):
+            n = int(ctx * hitfrac) // G
+            spec = KVSpec(32, G, 8, 128, 2)
+            for rate in (None, 1.0 * GBPS, 4.0 * GBPS, 32.0 * GBPS):
+                for profile in (S3_RDMA_AGG, LOCAL_DRAM):
+                    cf, ex = validate_split(ctx, n, spec, compute, profile,
+                                            rate)
+                    assert cf.ttft_s == pytest.approx(ex.ttft_s, abs=1e-12), \
+                        (ctx, G, hitfrac, profile.name, rate,
+                         cf.fetch_chunks, ex.fetch_chunks)
+
+
+class TestCrossover:
+    @pytest.mark.parametrize("ctx,hit", GRID)
+    def test_fetch_fraction_monotone_in_bandwidth(self, ctx, hit):
+        """Cake-style crossover: more bandwidth -> fetch at least as much."""
+        _, w, _, _ = _setup(ctx, hit)
+        rows = crossover_sweep(w, [r * GBPS for r in RATES])
+        ms = [r["fetch_chunks"] for r in rows]
+        assert all(a <= b for a, b in zip(ms, ms[1:])), ms
+
+    def test_extremes(self):
+        """Pure recompute as bandwidth -> 0; pure fetch when unthrottled."""
+        _, w, _, _ = _setup(16384, 0.875)
+        low = hybrid_workload_ttft(w, rate=0.05 * GBPS)
+        assert low.is_pure_recompute
+        high = hybrid_workload_ttft(w, rate=None)
+        assert high.is_pure_fetch
+
+    def test_zero_rate_degenerates_to_pure_recompute(self):
+        """allocate() can hand out rate 0 when the budget is exhausted; the
+        planner must not divide by it."""
+        _, _, spec, n = _setup(16384, 0.875)
+        m = PaperComputeModel()
+        s = plan_split(16384, n, spec, m, S3_RDMA_AGG, 0.0)
+        assert s.is_pure_recompute
+        assert s.ttft_s == pytest.approx(m.suffix_compute_s(16384, 0.0))
+
+    def test_zero_match_degenerates_to_pure_recompute(self):
+        _, _, spec, _ = _setup(16384, 0.875)
+        s = plan_split(16384, 0, spec, PaperComputeModel(), S3_RDMA_AGG, 1e9)
+        assert s.total_chunks == 0 and s.is_pure_recompute
+
+    def test_hybrid_strictly_better_somewhere(self):
+        """There is a mid-bandwidth regime where the interior split beats
+        both pure strategies — the whole point of compute-or-load."""
+        _, w, _, _ = _setup(16384, 0.875)
+        rows = crossover_sweep(w, [r * GBPS for r in RATES])
+        assert any(r["hybrid_s"] < min(r["fetch_s"], r["recompute_s"]) - 1e-9
+                   and 0 < r["fetch_chunks"] < r["total_chunks"]
+                   for r in rows), rows
+
+
+class TestMeasuredCompute:
+    def test_fit_recovers_linear_model(self):
+        base, per_tok = 2e-4, 3e-6
+        samples = [(s, base + per_tok * s) for s in (64, 256, 1024, 4096)]
+        m = MeasuredCompute.fit(samples, num_layers=4,
+                                bytes_per_token_per_layer=1024)
+        assert m.base_s == pytest.approx(base, rel=1e-6)
+        assert m.per_token_s == pytest.approx(per_tok, rel=1e-6)
+        assert m.layer_compute_s(4096, 0.5) == \
+            pytest.approx(base + per_tok * 2048, rel=1e-6)
+        assert m.suffix_compute_s(4096, 0.5) == \
+            pytest.approx(4 * (base + per_tok * 2048), rel=1e-6)
+
+    def test_degenerate_fit_never_divides_by_zero(self):
+        """A single-sample fit has no intercept and a full hit has no suffix:
+        the compute window is floored so rate math stays finite."""
+        m = MeasuredCompute.fit([(128, 0.004)], num_layers=2,
+                                bytes_per_token_per_layer=1024)
+        assert m.layer_compute_s(4096, 1.0) > 0.0
+        assert np.isfinite(m.required_bw(4096, 1.0))
+        with pytest.raises(ValueError):
+            MeasuredCompute.fit([], num_layers=2)
+
+
+class TestReplanningPolicy:
+    def _pool(self, budget, replan=True):
+        sim = ServingSimulator()
+        spec = sim.kv_spec(64)
+        rep = HybridReplanner(PaperComputeModel(), S3_RDMA_AGG, spec)
+        pool = BandwidthPool(budget=budget, policy=Policy.STALL_OPT,
+                             replanner=rep if replan else None)
+        ws = [WorkloadRequest("16K,87.5%", 16384, 0.875),
+              WorkloadRequest("64K,87.5%", 65536, 0.875)]
+        for w in ws:
+            rep.register(w.req_id, w.context)
+            pool.submit(sim.flow_request(w))
+        return sim, pool, ws
+
+    def test_stalling_flows_shrink_demand(self):
+        sim, pool, ws = self._pool(5 * GBPS)
+        alloc = pool.start_epoch(0.0)
+        assert pool.replans > 0
+        for w in ws:
+            flow = pool._flows[w.req_id]
+            orig = sim.flow_request(w)
+            assert flow.req.total_bytes <= orig.total_bytes
+            # a hybrid request asks for less bandwidth instead of stalling
+            assert per_layer_stall(flow.req, alloc[w.req_id]) <= \
+                per_layer_stall(orig, alloc[w.req_id]) + 1e-12
+
+    def test_total_stall_improves(self):
+        sim, pool, ws = self._pool(5 * GBPS)
+        alloc = pool.start_epoch(0.0)
+        _, base_pool, _ = self._pool(5 * GBPS, replan=False)
+        base = base_pool.start_epoch(0.0)
+        stall = sum(per_layer_stall(pool._flows[w.req_id].req,
+                                    alloc[w.req_id]) for w in ws)
+        stall_base = sum(per_layer_stall(sim.flow_request(w), base[w.req_id])
+                         for w in ws)
+        assert stall < stall_base
+
+    def test_no_replan_when_unconstrained(self):
+        _, pool, ws = self._pool(1000 * GBPS)
+        pool.start_epoch(0.0)
+        assert pool.replans == 0
+
+    def test_live_flows_keep_their_split(self):
+        """Re-planning applies only at admission; a flow mid-transfer is
+        never re-split (its bytes are already committed)."""
+        sim, pool, ws = self._pool(5 * GBPS)
+        pool.start_epoch(0.0)
+        replans = pool.replans
+        pool.advance(0.01)
+        pool.start_epoch(0.1)
+        assert pool.replans == replans
+
+    def test_flow_replanned_to_pure_recompute_still_completes(self):
+        """A flow whose split degenerates to zero bytes transfers nothing
+        but must still be reported done by advance() — callers track request
+        completion through that return."""
+        sim, pool, ws = self._pool(5 * GBPS)
+        pool.start_epoch(0.0)
+        zero = [w.req_id for w in ws
+                if pool._flows[w.req_id].req.total_bytes == 0]
+        assert zero, "expected at least one pure-recompute re-plan"
+        done = pool.advance(0.01)
+        assert set(zero) <= set(done)
+        assert not (set(zero) & set(pool.advance(0.01)))  # reported once
+
+    def test_zero_byte_flow_survives_back_to_back_epochs(self):
+        """Even if the epoch turns over before any advance(), a completed
+        zero-byte flow must still be reported exactly once."""
+        sim, pool, ws = self._pool(5 * GBPS)
+        pool.start_epoch(0.0)
+        zero = [w.req_id for w in ws
+                if pool._flows[w.req_id].req.total_bytes == 0]
+        assert zero
+        pool.start_epoch(0.1)  # no advance() in between
+        done = pool.advance(0.01)
+        assert set(zero) <= set(done)
+        assert not (set(zero) & set(pool.advance(0.01)))
+
+
+class TestHybridEngine:
+    G = 8
+
+    def _mk(self, cap):
+        cfg = get_smoke_config("smollm-135m")
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        spec = cfg.kv_spec(self.G,
+                           dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize)
+        compute = MeasuredCompute(
+            num_layers=spec.num_layers, base_s=0.0, per_token_s=1e-4,
+            bytes_per_token_per_layer=spec.bytes_per_token_per_layer)
+        planner = HybridPlanner(compute, LOCAL_DRAM, session_setup=False)
+        orch = Orchestrator(RadixIndex(self.G), Gateway(InMemoryStore()), spec,
+                            theta_bytes=0, bandwidth_cap=cap, hybrid=planner)
+        return ServingEngine(model, params, orch), orch
+
+    def test_serve_hybrid_bitwise_equals_no_cache_prefill(self):
+        """The acceptance bar: hybrid logits == no-cache prefill, bit for bit
+        (fp32 smoke model; the recompute-span and suffix go through the same
+        kernels, the fetch-span round-trips the object store losslessly)."""
+        engine, orch = self._mk(cap=1.28e6)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, 200, size=48)
+        cold = engine.submit(prompt, "cold")  # no-cache prefill
+        warm = engine.submit(prompt, "warm")
+        assert warm.delivery is Delivery.HYBRID
+        assert orch.stats["hybrid_splits"] == 1
+        # interior split: some chunks fetched, some recomputed
+        assert 0 < warm.matched_tokens < 40
+        assert warm.matched_tokens % self.G == 0
+        np.testing.assert_array_equal(warm.logits, cold.logits)
+
+    def test_hybrid_decode_matches_no_cache_decode(self):
+        engine, _ = self._mk(cap=1.28e6)
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(0, 200, size=48)
+        cold = engine.submit(prompt, "c", max_new_tokens=4)
+        warm = engine.submit(prompt, "w", max_new_tokens=4)
+        assert warm.delivery is Delivery.HYBRID
+        assert cold.new_tokens == warm.new_tokens
+
+    def test_pure_recompute_split_falls_back_to_full_prefill(self):
+        """A cap so tight the planner picks m=0: served exactly like a miss,
+        counted as a recompute fallback — not a hit, not a hybrid split."""
+        engine, orch = self._mk(cap=10.0)  # 10 B/s
+        rng = np.random.default_rng(2)
+        prompt = rng.integers(0, 200, size=48)
+        cold = engine.submit(prompt, "c")
+        warm = engine.submit(prompt, "w")
+        assert warm.matched_tokens == 0 and warm.delivery is None
+        assert orch.stats["hybrid_splits"] == 0
+        assert orch.stats["fallbacks"] == 1
+        np.testing.assert_array_equal(warm.logits, cold.logits)
+
+    def test_fused_family_honours_the_split(self):
+        """Families without layerwise streaming (llama4-style alternating
+        MoE) cannot overlap, but the split still governs how many bytes
+        move: the fetch-span arrives as whole chunks, the rest recomputes."""
+        cfg = get_smoke_config("llama4-maverick-400b-a17b")
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        spec = cfg.kv_spec(self.G,
+                           dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize)
+        compute = MeasuredCompute(
+            num_layers=spec.num_layers, base_s=0.0, per_token_s=1e-4,
+            bytes_per_token_per_layer=spec.bytes_per_token_per_layer)
+        orch = Orchestrator(RadixIndex(self.G), Gateway(InMemoryStore()), spec,
+                            theta_bytes=0, bandwidth_cap=1.28e6,
+                            hybrid=HybridPlanner(compute, LOCAL_DRAM,
+                                                 session_setup=False))
+        engine = ServingEngine(model, params, orch)
+        assert not engine._layerwise_ok
+        rng = np.random.default_rng(4)
+        prompt = rng.integers(0, 200, size=32)
+        cold = engine.submit(prompt, "c")
+        warm = engine.submit(prompt, "w")
+        assert orch.stats["hybrid_splits"] == 1
+        assert warm.delivery is Delivery.CHUNKWISE
+        assert 0 < warm.matched_tokens < 24  # a strict sub-span was fetched
+        np.testing.assert_allclose(warm.logits, cold.logits,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_unthrottled_stays_layerwise(self):
+        """With no cap and fast transport the planner fetches everything —
+        the plan degenerates to the ordinary layerwise path."""
+        engine, orch = self._mk(cap=None)
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, 200, size=48)
+        engine.submit(prompt, "c")
+        warm = engine.submit(prompt, "w")
+        assert warm.delivery is Delivery.LAYERWISE
+        assert orch.stats["hybrid_splits"] == 0

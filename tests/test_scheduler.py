@@ -136,6 +136,26 @@ def test_added_ttft_decreases_with_rate():
     assert added_ttft(r, 1e9) > added_ttft(r, 5e9) > added_ttft(r, 2e10)
 
 
+class TestDegenerateDemands:
+    """Proportional policies must not divide by zero when every request has
+    zero bytes (KV_PROP) or zero slack (BW_PROP) — fall back to EQUAL."""
+
+    def test_kv_prop_all_zero_bytes_falls_back_to_equal(self):
+        reqs = [FlowRequest("a", 0.0, 1.0, 4), FlowRequest("b", 0.0, 2.0, 4)]
+        alloc = allocate(reqs, 100.0, Policy.KV_PROP)
+        assert alloc == {"a": 50.0, "b": 50.0}
+
+    def test_bw_prop_all_zero_slack_falls_back_to_equal(self):
+        reqs = [FlowRequest("a", 0.0, 1.0, 4), FlowRequest("b", 0.0, 2.0, 4)]
+        alloc = allocate(reqs, 100.0, Policy.BW_PROP)
+        assert alloc == {"a": 50.0, "b": 50.0}
+
+    def test_zero_byte_flow_never_stalls(self):
+        r = FlowRequest("a", 0.0, 1.0, 4)
+        assert per_layer_stall(r, 0.0) == 0.0
+        assert added_ttft(r, 0.0) == 0.0
+
+
 # ---------------------------------------------------------------------------
 # epoch pool semantics (§3.6)
 # ---------------------------------------------------------------------------
@@ -168,3 +188,47 @@ class TestBandwidthPool:
         assert "c" not in pool.rates()
         pool.start_epoch(0.1)
         assert pool.rates()["a"] == pool.rates()["c"] == 50.0
+
+    def test_resubmitted_live_flow_is_deduplicated(self):
+        """A pending duplicate of a live flow must neither double-count in
+        the allocation nor clobber the live flow's transfer progress."""
+        pool = BandwidthPool(budget=100.0, policy=Policy.EQUAL)
+        pool.submit(FlowRequest("a", 100.0, 1.0, 2))
+        pool.submit(FlowRequest("b", 100.0, 1.0, 2))
+        pool.start_epoch(0.0)
+        pool.advance(1.0)  # a: 150 of 200 bytes remain
+        pool.submit(FlowRequest("a", 100.0, 1.0, 2))  # duplicate of live "a"
+        alloc = pool.start_epoch(0.1)
+        assert alloc == {"a": 50.0, "b": 50.0}  # still 2 flows, not 3
+        assert pool._flows["a"].remaining_bytes == pytest.approx(150.0)
+
+    def test_duplicates_within_pending_collapse_to_first(self):
+        pool = BandwidthPool(budget=100.0, policy=Policy.EQUAL)
+        pool.submit(FlowRequest("a", 100.0, 1.0, 2))
+        pool.submit(FlowRequest("a", 999.0, 1.0, 2))
+        alloc = pool.start_epoch(0.0)
+        assert alloc == {"a": 100.0}
+        assert pool._flows["a"].remaining_bytes == pytest.approx(200.0)
+
+    def test_resubmit_after_completion_restarts_the_flow(self):
+        pool = BandwidthPool(budget=100.0, policy=Policy.EQUAL)
+        pool.submit(FlowRequest("a", 10.0, 1.0, 1))
+        pool.start_epoch(0.0)
+        assert pool.advance(1.0) == ["a"]
+        pool.submit(FlowRequest("a", 10.0, 1.0, 1))
+        pool.start_epoch(1.0)
+        assert pool._flows["a"].remaining_bytes == pytest.approx(10.0)
+
+    def test_resubmit_of_unreported_completion_is_not_reported_early(self):
+        """A completed-but-unreported flow whose id is re-admitted fresh in
+        the same epoch must not surface the stale completion while the new
+        transfer is still in flight — completion stays exactly-once per
+        flow incarnation."""
+        pool = BandwidthPool(budget=100.0, policy=Policy.EQUAL)
+        pool.submit(FlowRequest("a", 0.0, 1.0, 1))  # zero-byte: done at birth
+        pool.start_epoch(0.0)
+        pool.submit(FlowRequest("a", 100.0, 1.0, 2))  # restart, 200 bytes
+        pool.start_epoch(0.1)  # no advance() in between
+        assert pool.advance(0.001) == []  # 199.9 bytes still in flight
+        assert pool.advance(10.0) == ["a"]  # the real completion, once
+        assert pool.advance(1.0) == []
