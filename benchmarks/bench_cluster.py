@@ -1,0 +1,95 @@
+"""Dynamic-arrival scheduler benchmark (paper §5.7 under Poisson traffic).
+
+The static Table A9/A12 reproduction (`bench_scheduler`) evaluates a fixed
+batch; this benchmark replays seeded Poisson arrival traces through the
+discrete-event cluster simulator so requests join and leave the shared
+bandwidth pool over time.  Reported per (load, policy):
+
+  total added TTFT vs the unthrottled layerwise baseline, TTFT p50/p95/p99,
+  queueing, goodput — and the headline CAL_STALL_OPT-vs-EQUAL added-TTFT
+  ratio, which must stay inside/above the paper's 1.2-1.8x static window.
+
+Run standalone:  PYTHONPATH=src python benchmarks/bench_cluster.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.cluster import ClusterSim, poisson_trace, summarize
+from repro.core.scheduler import Policy
+from repro.core.simulator import PAPER_MARGIN_BPS, ServingSimulator, WorkloadRequest
+
+try:  # runnable both as a package module and as a script
+    from .common import row, timeit
+except ImportError:  # pragma: no cover - script mode
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from common import row, timeit
+
+GBPS = 1e9 / 8
+CAP_BPS = 80 * GBPS  # workload A's cap
+POLICIES = [(Policy.EQUAL, 0.0), (Policy.STALL_OPT, 0.0),
+            (Policy.CAL_STALL_OPT, PAPER_MARGIN_BPS)]
+
+
+def _baselines(trace) -> dict[str, float]:
+    """Unthrottled layerwise TTFT per request (the §5.7 added-TTFT zero)."""
+    sim = ServingSimulator()
+    cache: dict[tuple, float] = {}
+    out = {}
+    for tr in trace:
+        key = (tr.context, tr.hit_rate, tr.chunk_tokens)
+        if key not in cache:
+            w = WorkloadRequest(tr.req_id, tr.context, tr.hit_rate,
+                                tr.chunk_tokens)
+            cache[key] = sim.ttft_layerwise(w).ttft_s
+        out[tr.req_id] = cache[key]
+    return out
+
+
+def run_load(n: int, rate_rps: float, seed: int = 0) -> list[str]:
+    trace = poisson_trace(n, rate_rps, seed=seed)
+    base = _baselines(trace)
+    rows, added = [], {}
+    for pol, margin in POLICIES:
+        sim = ClusterSim(cap_bps=CAP_BPS, policy=pol, margin_bps=margin)
+        wall = timeit(lambda: sim.run(trace), repeat=3, warmup=1)
+        m = summarize(sim.run(trace).records, base)
+        added[pol] = m.added_ttft_total_s
+        rows.append(row(
+            f"cluster_poisson/n{n}_r{rate_rps:g}/{pol.value}", wall * 1e6,
+            f"added_ttft_ms={m.added_ttft_total_s*1e3:.0f};"
+            f"p50_ms={m.ttft_p50_s*1e3:.0f};p95_ms={m.ttft_p95_s*1e3:.0f};"
+            f"p99_ms={m.ttft_p99_s*1e3:.0f};queue_ms={m.queue_total_s*1e3:.0f};"
+            f"goodput_rps={m.goodput_rps:.2f}"))
+    ratio = added[Policy.EQUAL] / max(added[Policy.CAL_STALL_OPT], 1e-9)
+    rows.append(row(
+        f"cluster_poisson/n{n}_r{rate_rps:g}/cal_vs_equal", 0.0,
+        f"added_ttft_reduction_x={ratio:.2f};paper_band=1.2-1.8"))
+    return rows
+
+
+def run(smoke: bool = False) -> list[str]:
+    # The 1.2-1.8x static window (Table A12) reproduces under Poisson
+    # arrivals at moderate contention (~1 rps against workload A's 80 Gbps
+    # cap, where pool membership mixes sizes continuously); at low load the
+    # two policies converge (pool mostly empty), and deep saturation drifts
+    # toward parity (completion-time effects dominate per-layer stalls).
+    # The load sweep records all three regimes.
+    if smoke:
+        return run_load(16, 1.0)
+    rows = []
+    for n, rate in ((40, 0.5), (40, 1.0), (40, 2.0)):  # load sweep
+        rows.extend(run_load(n, rate))
+    return rows
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    print("name,us_per_call,derived")
+    for line in run(smoke=smoke):
+        print(line, flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

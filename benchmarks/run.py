@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_ttft                  Fig 13 (end-to-end TTFT grid)
   bench_bandwidth_sensitivity Fig 14 + Fig 15 (caps and rate sweeps)
   bench_scheduler             Fig 16 + Tables A9/A12 (multi-tenant policies)
+  bench_cluster               §5.7 under Poisson arrivals (event-driven)
   bench_granularity           Table A6 + Fig 3 (recompute vs granularity)
   bench_hybrid                compute-or-load crossover (Cake-style sweep)
   bench_kernels               Pallas kernels vs oracles
@@ -18,15 +19,15 @@ from __future__ import annotations
 import sys
 import traceback
 
-from . import (bench_aggregation, bench_bandwidth_sensitivity, bench_engine,
-               bench_granularity, bench_hybrid, bench_kernels, bench_overlap,
-               bench_request_overhead, bench_scheduler, bench_transport,
-               bench_ttft)
+from . import (bench_aggregation, bench_bandwidth_sensitivity, bench_cluster,
+               bench_engine, bench_granularity, bench_hybrid, bench_kernels,
+               bench_overlap, bench_request_overhead, bench_scheduler,
+               bench_transport, bench_ttft)
 
 MODULES = [bench_transport, bench_request_overhead, bench_aggregation,
            bench_overlap, bench_ttft, bench_bandwidth_sensitivity,
-           bench_scheduler, bench_granularity, bench_hybrid, bench_kernels,
-           bench_engine]
+           bench_scheduler, bench_cluster, bench_granularity, bench_hybrid,
+           bench_kernels, bench_engine]
 
 
 def main() -> None:

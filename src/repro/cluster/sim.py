@@ -1,0 +1,411 @@
+"""Trace-driven discrete-event cluster serving simulator (DESIGN.md
+§Cluster-sim).
+
+`core.simulator.ServingSimulator.run_workload` evaluates a *fixed* batch with
+static `BandwidthPool` membership — the paper's §5.7 scheduler claim is a
+concurrency claim, so this module adds the missing time axis: requests
+ARRIVE from a trace, queue for admission, join the shared bandwidth pool,
+stream layers, recompute (hybrid re-planning at the offered rate), and leave
+— with rates re-shaped at event granularity.
+
+Fluid transfer model (exact vs the Eq. 3 closed forms at constant rate):
+
+    pre      = startup(+session setup) + io + asm        (rate-independent)
+    m_stage  = max(io, asm)                              (cadence floor)
+    the wire byte-clock integrates `profile.effective_wire_rate(alloc)`
+    starting at ``admit + pre``; layer l's crossing w_l is when (l+1)*s
+    bytes landed;
+    ready_l  = max(w_l, ready_{l-1} + m_stage)
+    finish_l = max(ready_l, finish_{l-1}) + c            (Eq. 3 recurrence)
+
+One-layer prefetch gate (§3.5): the wire may serve layer l+1 no earlier
+than compute of layer l *starts* (S_l = max(ready_l, finish_{l-1})) — a
+flow cannot absorb bandwidth faster than its pipeline consumes, so
+allocating beyond the zero-stall rate r* is physically useless, exactly the
+premise of `allocate`'s caps.  The gate provably never changes TTFT at a
+constant rate (whichever of wire/compute/io/asm is the bottleneck, the
+gated cadence equals the ungated Eq. 3 cadence); it only changes *when the
+flow's transfer finishes* — i.e. how long it occupies the bandwidth pool,
+which is what a concurrency simulation is about.
+
+At a constant allocated rate the recurrences reduce to
+``ready_l = startup + first + l*stage`` with ``(startup, first, stage) =
+profile.stage_times(...)`` — the single-request conformance tests pin the
+event loop to `ServingSimulator.ttft_layerwise` / `ttft_chunkwise` and the
+hybrid planner's `split_ttft` to 1e-9.
+
+Reallocation modes: ``epoch_s=None`` (default) re-allocates at every ARRIVE
+admission and FLOW_DONE departure (event mode); ``epoch_s=x`` restores the
+paper's conservative epoch rule — joins/leaves wait for the next REALLOC
+boundary, which makes the epoch API a degenerate trace of this simulator.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Optional, Sequence, Union
+
+from repro.core.compute_model import PaperComputeModel
+from repro.core.scheduler import BandwidthPool, Policy
+from repro.core.transport import (LOCAL_DRAM, RDMA_SESSION_SETUP_S,
+                                  S3_RDMA_AGG, TransportProfile, VirtualClock)
+from repro.core.types import FlowRequest, KVSpec
+
+from .events import Event, EventKind, EventQueue
+from .metrics import ClusterMetrics, RequestRecord, summarize
+from .trace import ClosedLoopTrace, TraceRequest
+
+_NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass
+class _ActiveFlow:
+    tr: TraceRequest
+    record: RequestRecord
+    fr: FlowRequest  # admitted (possibly re-planned) demand
+    chunkwise: bool
+    layer_bytes: float
+    total_bytes: float
+    num_layers: int
+    c: float  # per-layer compute window
+    c_total: float  # chunkwise total suffix compute
+    pre_s: float  # startup(+session) + io + asm
+    m_stage: float  # max(io, asm)
+    # fluid wire state
+    t_update: float
+    delivered: float = 0.0
+    alloc_rate: Optional[float] = None
+    phys_rate: float = 0.0
+    next_layer: int = 0
+    version: int = 0
+    wire_done: bool = False
+    # Eq. 3 recurrences
+    ready_prev: float = _NEG_INF
+    finish_prev: float = _NEG_INF
+
+    def next_threshold(self) -> float:
+        if self.chunkwise:
+            return self.total_bytes
+        return (self.next_layer + 1) * self.layer_bytes
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    records: list[RequestRecord]
+    reallocs: int
+    replans: int
+    events: dict[str, int]
+
+    def metrics(self, baseline_ttft_s=None) -> ClusterMetrics:
+        return summarize(self.records, baseline_ttft_s)
+
+    def by_id(self) -> dict[str, RequestRecord]:
+        return {r.req_id: r for r in self.records}
+
+
+class ClusterSim:
+    """Deterministic discrete-event simulator of one serving cluster sharing
+    a bandwidth cap.
+
+    ``cap_bps=None`` runs unthrottled (no pool); otherwise a `BandwidthPool`
+    allocates under ``policy``/``margin`` and ``replanner`` (a
+    `HybridReplanner`) lets stalling admissions shrink to a compute-or-load
+    split at their offered rate.  ``max_flows`` bounds concurrent transfers;
+    excess arrivals wait in FIFO admission order.
+    """
+
+    def __init__(self, cap_bps: Optional[float] = None,
+                 policy: Policy = Policy.CAL_STALL_OPT,
+                 margin_bps: float = 0.0,
+                 compute: Optional[PaperComputeModel] = None,
+                 profile: TransportProfile = S3_RDMA_AGG,
+                 spec: Optional[KVSpec] = None,
+                 mode: str = "layerwise",
+                 session_setup: bool = True,
+                 replanner=None,
+                 max_flows: Optional[int] = None,
+                 epoch_s: Optional[float] = None) -> None:
+        if mode not in ("layerwise", "chunkwise"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.compute = compute or PaperComputeModel()
+        self.profile = profile
+        self.mode = mode
+        self.session_setup = session_setup
+        self.replanner = replanner
+        self.max_flows = max_flows
+        self.epoch_s = epoch_s
+        self.clock = VirtualClock()
+        self._spec_arg = spec
+        self.pool: Optional[BandwidthPool] = None
+        if cap_bps is not None:
+            self.pool = BandwidthPool(cap_bps, policy, margin_bps,
+                                      replanner=replanner)
+        if replanner is not None and hasattr(replanner, "clock"):
+            replanner.clock = self.clock
+
+    def kv_spec(self, chunk_tokens: int) -> KVSpec:
+        if self._spec_arg is not None:
+            return self._spec_arg
+        return KVSpec(num_layers=self.compute.num_layers,
+                      chunk_tokens=chunk_tokens, num_kv_heads=8, head_dim=128,
+                      dtype_bytes=2)
+
+    # -- one run --------------------------------------------------------------
+    def run(self, trace: Union[Sequence[TraceRequest], ClosedLoopTrace]
+            ) -> ClusterResult:
+        self._queue = EventQueue()
+        self._active: dict[str, _ActiveFlow] = {}
+        self._backlog: collections.deque[TraceRequest] = collections.deque()
+        self._records: list[RequestRecord] = []
+        self._transfers = 0  # flows occupying admission slots
+        self._realloc_scheduled_t: Optional[float] = None
+        self._counts = {k.value: 0 for k in EventKind}
+        self._sim_reallocs = 0
+
+        if isinstance(trace, ClosedLoopTrace) or hasattr(trace, "initial"):
+            self._closed = trace
+            initial = list(trace.initial())
+        else:
+            self._closed = None
+            initial = sorted(trace, key=lambda r: (r.arrival_s, r.req_id))
+        for tr in initial:
+            self._queue.push(Event(tr.arrival_s, EventKind.ARRIVE, payload=tr))
+
+        while self._queue:
+            ev = self._queue.pop()
+            self.clock.advance_to(ev.time)
+            self._counts[ev.kind.value] += 1
+            handler = {
+                EventKind.ARRIVE: self._on_arrive,
+                EventKind.WIRE: self._on_wire,
+                EventKind.LAYER_READY: self._on_layer_ready,
+                EventKind.FLOW_DONE: self._on_flow_done,
+                EventKind.PREFILL_DONE: self._on_prefill_done,
+                EventKind.REALLOC: self._on_realloc,
+            }[ev.kind]
+            handler(ev)
+
+        pool = self.pool
+        return ClusterResult(
+            records=self._records,
+            reallocs=pool.reallocs if pool else self._sim_reallocs,
+            replans=pool.replans if pool else 0,
+            events=dict(self._counts))
+
+    # -- event handlers -------------------------------------------------------
+    def _on_arrive(self, ev: Event) -> None:
+        tr: TraceRequest = ev.payload
+        rec = RequestRecord(tr.req_id, tr.context, tr.hit_rate, tr.arrival_s)
+        self._records.append(rec)
+        self._backlog.append(tr)
+        if self.epoch_s is None:
+            self._reallocate(ev.time)
+        else:
+            self._schedule_epoch_realloc(ev.time)
+
+    def _on_wire(self, ev: Event) -> None:
+        fl = self._active.get(ev.req_id)
+        if fl is None or fl.wire_done or ev.version != fl.version:
+            return  # stale prediction (rate changed since it was pushed)
+        self._advance_wire(fl, ev.time)
+
+    def _on_layer_ready(self, ev: Event) -> None:
+        pass  # observational: readiness was folded into the recurrences
+
+    def _on_flow_done(self, ev: Event) -> None:
+        fl = self._active.get(ev.req_id)
+        if fl is None:
+            return
+        fl.record.flow_done_s = ev.time
+        self._transfers -= 1
+        if self.pool is not None:
+            self.pool.complete(ev.req_id)
+        if self.epoch_s is None:
+            self._reallocate(ev.time)
+
+    def _on_prefill_done(self, ev: Event) -> None:
+        fl = self._active.pop(ev.req_id, None)
+        if fl is None:
+            return
+        fl.record.prefill_done_s = ev.time
+        if self.replanner is not None and hasattr(self.replanner, "unregister"):
+            self.replanner.unregister(ev.req_id)
+        if self._closed is not None:
+            nxt = self._closed.on_complete(fl.tr, ev.time)
+            if nxt is not None:
+                self._queue.push(Event(nxt.arrival_s, EventKind.ARRIVE,
+                                       payload=nxt))
+
+    def _on_realloc(self, ev: Event) -> None:
+        self._realloc_scheduled_t = None
+        self._reallocate(ev.time)
+        if self._transfers > 0 or self._backlog:
+            self._realloc_scheduled_t = ev.time + self.epoch_s
+            self._queue.push(Event(ev.time + self.epoch_s, EventKind.REALLOC))
+
+    def _schedule_epoch_realloc(self, after: float) -> None:
+        """Next epoch boundary at or after ``after`` (epoch mode only)."""
+        if self.epoch_s is None or self._realloc_scheduled_t is not None:
+            return
+        k = math.ceil(after / self.epoch_s - 1e-12)
+        t = max(k, 0) * self.epoch_s
+        self._realloc_scheduled_t = t
+        self._queue.push(Event(t, EventKind.REALLOC))
+
+    # -- admission + rate shaping ---------------------------------------------
+    def _reallocate(self, now: float) -> None:
+        self._sim_reallocs += 1
+        # 1. bring every in-flight wire up to `now` under the old rates
+        for fl in self._active.values():
+            if not fl.wire_done:
+                self._advance_wire(fl, now)
+        # 2. FIFO admission under the transfer-slot cap
+        admitted: list[TraceRequest] = []
+        while self._backlog and (self.max_flows is None
+                                 or self._transfers < self.max_flows):
+            tr = self._backlog.popleft()
+            if self.replanner is not None and hasattr(self.replanner, "register"):
+                self.replanner.register(tr.req_id, tr.context)
+            if self.pool is not None:
+                self.pool.submit(self._flow_request(tr))
+            admitted.append(tr)
+            self._transfers += 1
+        # 3. one allocation round (replanner folds stalling fresh flows here)
+        alloc = self.pool.reallocate(now) if self.pool is not None else {}
+        # 4. start newly admitted flows from their *admitted* demand
+        for tr in admitted:
+            self._start_flow(tr, now, alloc)
+        # 5. re-shape surviving flows' rates
+        for fid, fl in self._active.items():
+            if fl.wire_done:
+                continue
+            rate = alloc.get(fid) if self.pool is not None else None
+            if rate != fl.alloc_rate:
+                fl.alloc_rate = rate
+                fl.phys_rate = self.profile.effective_wire_rate(rate)
+                fl.version += 1
+                self._schedule_next_wire(fl)
+
+    def _flow_request(self, tr: TraceRequest) -> FlowRequest:
+        spec = self.kv_spec(tr.chunk_tokens)
+        n_chunks = tr.cached_tokens // tr.chunk_tokens
+        layer_bytes = float(n_chunks * spec.per_layer_chunk_bytes)
+        if self.mode == "chunkwise":
+            # the pool waterfills on (s_i, c_i); spread the bulk transfer
+            # evenly so zero_stall_rate stays meaningful
+            c = self.compute.suffix_compute_s(tr.context, tr.hit_rate) \
+                / spec.num_layers
+        else:
+            c = self.compute.layer_compute_s(tr.context, tr.hit_rate)
+        return FlowRequest(tr.req_id, layer_bytes, c, spec.num_layers)
+
+    def _start_flow(self, tr: TraceRequest, now: float,
+                    alloc: dict[str, float]) -> None:
+        spec = self.kv_spec(tr.chunk_tokens)
+        nominal = self._flow_request(tr)
+        fr = nominal
+        rate: Optional[float] = None
+        if self.pool is not None:
+            fr = self.pool.flow_request(tr.req_id)  # post-replan demand
+            rate = alloc[tr.req_id]
+        L = spec.num_layers
+        layer_bytes = fr.bytes_per_layer
+        n_chunks = int(round(layer_bytes / spec.per_layer_chunk_bytes))
+        rec = next(r for r in reversed(self._records) if r.req_id == tr.req_id)
+        rec.admit_s = now
+        rec.num_layers = L
+        rec.layer_compute_s = fr.layer_compute_s
+        rec.bytes_total = layer_bytes * L
+        rec.replanned = fr.bytes_per_layer != nominal.bytes_per_layer
+
+        fl = _ActiveFlow(
+            tr=tr, record=rec, fr=fr, chunkwise=(self.mode == "chunkwise"),
+            layer_bytes=layer_bytes, total_bytes=layer_bytes * L,
+            num_layers=L, c=fr.layer_compute_s,
+            c_total=fr.layer_compute_s * L, pre_s=0.0, m_stage=0.0,
+            t_update=now, alloc_rate=rate,
+            phys_rate=self.profile.effective_wire_rate(rate))
+        self._active[tr.req_id] = fl
+
+        if layer_bytes <= 0.0:
+            # pure recompute (re-planned to m=0): no transfer, no startup —
+            # the T(0) endpoint of the planner, L*c after admission.
+            fl.wire_done = True
+            fl.pre_s = fl.m_stage = 0.0
+            self._queue.push(Event(now, EventKind.FLOW_DONE, tr.req_id))
+            self._queue.push(Event(now + L * fl.c, EventKind.PREFILL_DONE,
+                                   tr.req_id))
+            return
+        if fl.chunkwise:
+            startup, io, _asm = self.profile.pipeline_components(
+                n_chunks, int(fl.total_bytes))
+            # batch_get semantics: control + storage io, no assemble stage
+            fl.pre_s = startup + io
+            fl.m_stage = 0.0
+            fl.c_total = self.compute.suffix_compute_s(tr.context, tr.hit_rate)
+        else:
+            startup, io, asm = self.profile.pipeline_components(
+                n_chunks, int(layer_bytes))
+            if self.session_setup and self.profile is not LOCAL_DRAM:
+                startup += RDMA_SESSION_SETUP_S
+            fl.pre_s = startup + io + asm
+            fl.m_stage = max(io, asm)
+            # the wire stage starts after the control-plane + fill latency
+            fl.t_update = now + fl.pre_s
+        self._schedule_next_wire(fl)
+
+    # -- fluid wire integration ----------------------------------------------
+    def _schedule_next_wire(self, fl: _ActiveFlow) -> None:
+        if fl.wire_done or fl.phys_rate <= 0.0:
+            return  # starved: woken by the next reallocation
+        t = fl.t_update + (fl.next_threshold() - fl.delivered) / fl.phys_rate
+        self._queue.push(Event(t, EventKind.WIRE, fl.tr.req_id,
+                               version=fl.version))
+
+    def _advance_wire(self, fl: _ActiveFlow, now: float) -> None:
+        """Process every wire-threshold crossing in (t_update, now] at the
+        current constant rate, then sync the byte clock to ``now``.
+
+        ``t_update`` may sit in the future while the wire idles at the
+        one-layer-prefetch gate (or during the initial ``pre`` latency);
+        integration simply has nothing to do until then."""
+        while not fl.wire_done and fl.phys_rate > 0.0:
+            thr = fl.next_threshold()
+            t_cross = fl.t_update + (thr - fl.delivered) / fl.phys_rate
+            if t_cross > now:
+                break
+            fl.delivered = thr
+            fl.t_update = t_cross
+            self._on_wire_cross(fl, t_cross)
+        if not fl.wire_done and now > fl.t_update:
+            fl.delivered += fl.phys_rate * (now - fl.t_update)
+            fl.t_update = now
+
+    def _on_wire_cross(self, fl: _ActiveFlow, t: float) -> None:
+        fid = fl.tr.req_id
+        if fl.chunkwise:
+            fl.wire_done = True
+            self._queue.push(Event(t, EventKind.FLOW_DONE, fid))
+            self._queue.push(Event(t + fl.pre_s + fl.c_total,
+                                   EventKind.PREFILL_DONE, fid))
+            return
+        l = fl.next_layer
+        ready = t
+        if l > 0:
+            ready = max(ready, fl.ready_prev + fl.m_stage)
+        compute_start = max(ready, fl.finish_prev) if l > 0 else ready
+        fl.ready_prev = ready
+        fl.finish_prev = compute_start + fl.c
+        self._queue.push(Event(ready, EventKind.LAYER_READY, fid, layer=l))
+        if l == fl.num_layers - 1:
+            fl.wire_done = True
+            self._queue.push(Event(t, EventKind.FLOW_DONE, fid))
+            self._queue.push(Event(fl.finish_prev, EventKind.PREFILL_DONE,
+                                   fid))
+        else:
+            # one-layer prefetch: the wire serves layer l+1 no earlier than
+            # compute of layer l starts (absorption is consumption-gated)
+            fl.t_update = max(t, compute_start)
+            fl.next_layer = l + 1
+            self._schedule_next_wire(fl)

@@ -177,6 +177,7 @@ class BandwidthPool:
         self._pending_done: list[str] = []
         self._epoch_start = 0.0
         self.epochs = 0
+        self.reallocs = 0
         self.replans = 0
 
     def submit(self, req: FlowRequest) -> None:
@@ -185,10 +186,51 @@ class BandwidthPool:
     def rates(self) -> dict[str, float]:
         return {fid: f.rate for fid, f in self._flows.items()}
 
+    # -- event-callback surface (cluster.sim; DESIGN.md §Cluster-sim) ---------
+    def live_ids(self) -> set[str]:
+        """Flows still transferring (holding bandwidth until reallocation)."""
+        return {fid for fid, f in self._flows.items() if f.remaining_bytes > 0}
+
+    def flow_request(self, req_id: str) -> FlowRequest:
+        """The admitted (possibly re-planned) request of a flow — the demand
+        `reallocate` actually allocated for, which an event-driven caller
+        must use for its transfer/compute model."""
+        return self._flows[req_id].req
+
+    def remaining_bytes(self, req_id: str) -> float:
+        return self._flows[req_id].remaining_bytes
+
+    def complete(self, req_id: str) -> None:
+        """Externally-clocked completion (event-driven mode): the caller
+        integrated the flow's physical transfer itself and observed it finish.
+        The flow's bandwidth returns to the pool at the next `reallocate`
+        (same conservative rule as epoch mode); `advance` will not re-report
+        it.  A no-op for flows an intervening `reallocate` already retired
+        (e.g. a zero-byte pure-recompute flow whose slot turned over before
+        the caller's completion event fired)."""
+        self._pending_done = [d for d in self._pending_done if d != req_id]
+        f = self._flows.get(req_id)
+        if f is None:
+            return
+        f.remaining_bytes = 0.0
+        f.done_reported = True
+
     def start_epoch(self, now: float) -> dict[str, float]:
         """Re-admit pending + surviving flows and fix rates for this epoch."""
-        self._epoch_start = now
         self.epochs += 1
+        return self.reallocate(now)
+
+    def reallocate(self, now: float) -> dict[str, float]:
+        """Event-callback core shared by the epoch API and the cluster
+        simulator: re-admit pending + surviving flows, re-plan fresh stalling
+        flows (compute-or-load hook), and fix rates until the next call.
+
+        Epoch mode calls this on a fixed cadence via `start_epoch`; the
+        event-driven simulator calls it at ARRIVE / FLOW_DONE / REALLOC
+        events, so joins and leaves re-shape rates at event granularity
+        rather than at epoch boundaries."""
+        self._epoch_start = now
+        self.reallocs += 1
         live = [f.req for f in self._flows.values() if f.remaining_bytes > 0]
         live_ids = {r.req_id for r in live}
         # Deduplicate re-submissions: a pending duplicate of a live flow must

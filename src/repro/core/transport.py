@@ -84,12 +84,36 @@ class TransportProfile:
     staging_bandwidth: Optional[float]  # extra gateway staging pass (Buffer path)
     storage: StorageProfile
 
+    def effective_wire_rate(self, rate_limit: Optional[float] = None) -> float:
+        """Fluid-model data-plane rate (B/s): the harmonic combination of the
+        (possibly rate-limited) wire and the optional staging pass, such that
+        ``wire_time(n, r) == n / effective_wire_rate(r)`` exactly.  The cluster
+        simulator integrates transfer progress at this rate between events."""
+        bw = self.wire_bandwidth if rate_limit is None else min(self.wire_bandwidth, rate_limit)
+        if bw <= 0.0:
+            return 0.0
+        if self.staging_bandwidth is None:
+            return bw
+        return 1.0 / (1.0 / bw + 1.0 / self.staging_bandwidth)
+
     def wire_time(self, nbytes: int, rate_limit: Optional[float] = None) -> float:
         bw = self.wire_bandwidth if rate_limit is None else min(self.wire_bandwidth, rate_limit)
         t = nbytes / bw
         if self.staging_bandwidth is not None:
             t += nbytes / self.staging_bandwidth
         return t
+
+    def pipeline_components(self, n_objects: int, payload_bytes: int
+                            ) -> tuple[float, float, float]:
+        """(startup, io, asm) — the rate-independent parts of the 3-stage
+        layerwise pipeline.  The cluster simulator needs them separately from
+        the wire term (whose rate varies between reallocation events);
+        ``stage_times`` composes the same numbers, so the event-driven and
+        closed-form paths cannot drift apart."""
+        startup = self.control_plane_s + self.per_object_s * n_objects
+        io = self.storage.io_time(n_objects, payload_bytes)
+        asm = self.storage.assemble_time(payload_bytes)
+        return startup, io, asm
 
     def stage_times(self, n_objects: int, payload_bytes: int,
                     rate_limit: Optional[float] = None
@@ -99,9 +123,7 @@ class TransportProfile:
         control-plane cost, ``first`` the fill latency of layer 0, ``stage``
         the steady-state per-layer cadence.  Shared by the TTFT simulator and
         the compute-or-load planner so the two can never drift apart."""
-        startup = self.control_plane_s + self.per_object_s * n_objects
-        io = self.storage.io_time(n_objects, payload_bytes)
-        asm = self.storage.assemble_time(payload_bytes)
+        startup, io, asm = self.pipeline_components(n_objects, payload_bytes)
         wire = self.wire_time(payload_bytes, rate_limit)
         return startup, io + asm + wire, max(io, asm, wire)
 

@@ -44,6 +44,16 @@ class HybridReplanner:
     max_contexts: int = 4096
     session_setup: bool = True
     method: str = "closed_form"
+    # Event-time integration (DESIGN.md §Cluster-sim): when a clock is
+    # attached (`cluster.sim.ClusterSim` assigns its event clock; any object
+    # with ``now()`` works), every re-planning decision is stamped with the
+    # *event* time it was made at — not an epoch index — and logged to
+    # ``history`` as (now_s, req_id, fetch_chunks, offered_rate).  Bounded
+    # like ``contexts``: a long-lived pool keeps only the most recent
+    # ``max_history`` decisions.
+    clock: Optional[object] = None
+    history: list = dataclasses.field(default_factory=list)
+    max_history: int = 4096
 
     def register(self, req_id: str, context_tokens: int) -> None:
         self.contexts.pop(req_id, None)
@@ -66,5 +76,10 @@ class HybridReplanner:
                            method=self.method)
         if split.is_pure_fetch:
             return None  # fetching everything is still optimal at this rate
+        if self.clock is not None:
+            self.history.append((self.clock.now(), req.req_id,
+                                 split.fetch_chunks, rate))
+            if len(self.history) > self.max_history:
+                del self.history[:len(self.history) - self.max_history]
         return FlowRequest(req.req_id, split.bytes_per_layer,
                            split.layer_compute_s, req.num_layers)

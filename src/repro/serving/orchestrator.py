@@ -15,6 +15,7 @@ from typing import TYPE_CHECKING, Optional
 import numpy as np
 
 if TYPE_CHECKING:
+    from repro.core.scheduler import BandwidthPool
     from repro.hybrid.planner import HybridPlanner
 
 from repro.core import (Delivery, FlowRequest, Gateway, KVSpec, Policy,
@@ -64,7 +65,9 @@ class Orchestrator:
                  margin: float = 0.0,
                  straggler: Optional[StragglerModel] = None,
                  hedge: bool = False,
-                 hybrid: Optional["HybridPlanner"] = None) -> None:
+                 hybrid: Optional["HybridPlanner"] = None,
+                 pool: Optional["BandwidthPool"] = None,
+                 clock=None) -> None:
         self.index = index
         self.gateway = gateway
         self.spec = spec
@@ -76,8 +79,17 @@ class Orchestrator:
         self.straggler = straggler or StragglerModel()
         self.hedge = hedge
         self.hybrid = hybrid
+        # Event-time scheduling (DESIGN.md §Cluster-sim): with a shared
+        # `BandwidthPool` + clock attached, `plan` obtains its rate by
+        # submitting to the pool and re-allocating at the *event* time of the
+        # request's arrival — not by a one-shot static `allocate` against a
+        # snapshot of `active` flows, and not by waiting for an epoch
+        # boundary.  `clock` is any object with ``now()`` (VirtualClock in
+        # simulation, WallClock when serving live).
+        self.pool = pool
+        self.clock = clock
         self.stats = {"hits": 0, "misses": 0, "fallbacks": 0, "hedged": 0,
-                      "hybrid_splits": 0}
+                      "hybrid_splits": 0, "reallocs": 0}
 
     # -- planning ------------------------------------------------------------
     def plan(self, tokens, layer_compute_s: float,
@@ -90,17 +102,33 @@ class Orchestrator:
         W = self.spec.matched_payload_bytes(match.num_chunks)
         delivery = select_mode(W, self.theta)
         rate = None
-        if self.cap is not None and delivery is Delivery.LAYERWISE:
+        if delivery is Delivery.LAYERWISE and (self.pool is not None
+                                               or self.cap is not None):
             me = FlowRequest(req_id,
                              match.num_chunks * self.spec.per_layer_chunk_bytes,
                              layer_compute_s, self.spec.num_layers)
-            flows = [me, *(active or [])]
-            rate = allocate(flows, self.cap, self.policy, self.margin)[req_id]
+            if self.pool is not None:
+                # event-driven: join the shared pool and re-shape every
+                # tenant's rate now, at this arrival's event time
+                now = self.clock.now() if self.clock is not None else 0.0
+                if hasattr(self.pool.replanner, "register"):
+                    self.pool.replanner.register(req_id, len(tokens))
+                self.pool.submit(me)
+                rate = self.pool.reallocate(now)[req_id]
+                self.stats["reallocs"] += 1
+            else:
+                flows = [me, *(active or [])]
+                rate = allocate(flows, self.cap, self.policy, self.margin)[req_id]
         if self.hybrid is not None and delivery is Delivery.LAYERWISE:
             split = self.hybrid.plan(len(tokens), match.num_chunks, self.spec,
                                      rate)
             if split.is_pure_recompute:
                 # Fetching nothing is a recompute fallback (§6.2), not a hit.
+                # The flow joined the pool above but will never transfer a
+                # byte — retire it, or it would hold (and shrink) every
+                # future tenant's allocation forever.
+                if self.pool is not None:
+                    self.pool.complete(req_id)
                 self.stats["fallbacks"] += 1
                 return TransferPlan(match, None, None)
             if not split.is_pure_fetch:

@@ -1,0 +1,395 @@
+"""Cluster simulator tests: conformance of the event loop to the Eq. 3
+closed forms, golden-trace regression, determinism contract, dynamic
+join/leave semantics, and the event-clock wiring of planner decisions."""
+import json
+import math
+import os
+
+import pytest
+
+from repro.cluster import (ClosedLoopTrace, ClusterSim, EventKind, TraceRequest,
+                           load_trace, percentile, poisson_trace, save_trace,
+                           summarize)
+from repro.core.compute_model import PaperComputeModel
+from repro.core.scheduler import Policy, allocate
+from repro.core.simulator import (PAPER_MARGIN_BPS, ServingSimulator,
+                                  WorkloadRequest)
+from repro.core.transport import S3_RDMA_AGG, S3_RDMA_BATCH, S3_RDMA_BUFFER
+from repro.hybrid.planner import split_ttft
+from repro.hybrid.policy import HybridReplanner
+
+DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+GBPS = 1e9 / 8
+GRID = [(c, r) for c in (4096, 16384, 32768, 65536) for r in (0.5, 0.875)]
+
+
+def _one(context, hit, **sim_kw):
+    """TTFT of a single-request trace arriving at t=0."""
+    cs = ClusterSim(**sim_kw)
+    res = cs.run([TraceRequest("r0", 0.0, context, hit)])
+    rec = res.records[0]
+    assert rec.done
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Conformance: single-request traces equal the closed forms to 1e-9
+# ---------------------------------------------------------------------------
+class TestConformance:
+    @pytest.mark.parametrize("context,hit", GRID)
+    def test_layerwise_unthrottled_equals_ttft_layerwise(self, context, hit):
+        sim = ServingSimulator()
+        w = WorkloadRequest("r0", context, hit)
+        rec = _one(context, hit, cap_bps=None)
+        assert rec.ttft_s == pytest.approx(sim.ttft_layerwise(w).ttft_s,
+                                           abs=1e-9)
+
+    @pytest.mark.parametrize("context,hit", GRID)
+    @pytest.mark.parametrize("cap_gbps", [10, 50])
+    def test_layerwise_capped_equals_ttft_layerwise(self, context, hit,
+                                                    cap_gbps):
+        """With a cap, the sim's rate comes from the same allocate() call the
+        static path uses — TTFT must match the rate-limited closed form."""
+        sim = ServingSimulator()
+        w = WorkloadRequest("r0", context, hit)
+        cap = cap_gbps * GBPS
+        rate = allocate([sim.flow_request(w)], cap, Policy.CAL_STALL_OPT,
+                        PAPER_MARGIN_BPS)["r0"]
+        rec = _one(context, hit, cap_bps=cap, policy=Policy.CAL_STALL_OPT,
+                   margin_bps=PAPER_MARGIN_BPS)
+        want = sim.ttft_layerwise(w, rate_limit=rate).ttft_s
+        assert rec.ttft_s == pytest.approx(want, abs=1e-9)
+
+    @pytest.mark.parametrize("context,hit", GRID)
+    def test_chunkwise_equals_ttft_chunkwise(self, context, hit):
+        sim = ServingSimulator()
+        w = WorkloadRequest("r0", context, hit)
+        rec = _one(context, hit, cap_bps=None, profile=S3_RDMA_BATCH,
+                   mode="chunkwise")
+        assert rec.ttft_s == pytest.approx(sim.ttft_chunkwise(w).ttft_s,
+                                           abs=1e-9)
+
+    def test_staging_profile_effective_rate_is_exact(self):
+        """S3RDMA-Buffer's staging pass folds into the harmonic effective
+        wire rate — the fluid model must still hit the closed form."""
+        sim = ServingSimulator()
+        w = WorkloadRequest("r0", 16384, 0.875)
+        rec = _one(16384, 0.875, cap_bps=None, profile=S3_RDMA_BUFFER)
+        want = sim.ttft_layerwise(w, profile=S3_RDMA_BUFFER).ttft_s
+        assert rec.ttft_s == pytest.approx(want, abs=1e-9)
+
+    def test_hybrid_replan_equals_planner_split_ttft(self):
+        """A single stalling request re-planned at its offered rate must land
+        exactly on the planner's T(m*) at the final allocation."""
+        compute = PaperComputeModel()
+        sim = ServingSimulator(compute)
+        spec = sim.kv_spec(64)
+        cap = 2 * GBPS  # far below r*: forces a compute-or-load split
+        rep = HybridReplanner(compute=compute, profile=S3_RDMA_AGG, spec=spec)
+        cs = ClusterSim(cap_bps=cap, policy=Policy.CAL_STALL_OPT,
+                        replanner=rep)
+        res = cs.run([TraceRequest("r0", 0.0, 16384, 0.875)])
+        rec = res.records[0]
+        assert rec.replanned and res.replans == 1
+        # replicate the pool's two allocation rounds by hand
+        ref = HybridReplanner(compute=compute, profile=S3_RDMA_AGG, spec=spec)
+        ref.register("r0", 16384)
+        flow = sim.flow_request(WorkloadRequest("r0", 16384, 0.875))
+        first = allocate([flow], cap, Policy.CAL_STALL_OPT, 0.0)["r0"]
+        reduced = ref(flow, first)
+        final = allocate([reduced], cap, Policy.CAL_STALL_OPT, 0.0)["r0"]
+        m = int(round(reduced.bytes_per_layer / spec.per_layer_chunk_bytes))
+        assert 0 < m < 16384 * 0.875 // 64
+        want = split_ttft(m, 16384, spec, compute, S3_RDMA_AGG, final)
+        assert rec.ttft_s == pytest.approx(want, abs=1e-9)
+
+    def test_epoch_mode_single_request_matches_event_mode(self):
+        """With one request arriving exactly on an epoch boundary, the epoch
+        schedule is a degenerate trace: same admission, same rate, same
+        TTFT."""
+        ev = _one(16384, 0.5, cap_bps=50 * GBPS)
+        ep = _one(16384, 0.5, cap_bps=50 * GBPS, epoch_s=0.1)
+        assert ep.admit_s == ev.admit_s == 0.0
+        assert ep.ttft_s == pytest.approx(ev.ttft_s, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Golden-trace regression (committed trace + expected per-request table)
+# ---------------------------------------------------------------------------
+class TestGoldenTrace:
+    def _run(self):
+        trace = load_trace(os.path.join(DATA, "golden_trace.json"))
+        sim = ClusterSim(cap_bps=50 * GBPS, policy=Policy.CAL_STALL_OPT,
+                         margin_bps=PAPER_MARGIN_BPS)
+        return sim.run(trace)
+
+    def test_replay_matches_committed_table(self):
+        with open(os.path.join(DATA, "golden_trace_expected.json")) as f:
+            expected = json.load(f)
+        res = self._run()
+        got = {r.req_id: r for r in res.records}
+        assert len(got) == len(expected["requests"])
+        for row in expected["requests"]:
+            r = got[row["req_id"]]
+            for field in ("arrival_s", "admit_s", "flow_done_s",
+                          "prefill_done_s", "ttft_s"):
+                assert getattr(r, field) == pytest.approx(row[field],
+                                                          abs=1e-9), \
+                    (row["req_id"], field)
+        assert res.reallocs == expected["reallocs"]
+        assert res.events == expected["events"]
+
+    def test_same_seed_is_bit_identical(self):
+        a, b = self._run(), self._run()
+        ra = [(r.req_id, r.ttft_s, r.admit_s, r.flow_done_s, r.prefill_done_s)
+              for r in a.records]
+        rb = [(r.req_id, r.ttft_s, r.admit_s, r.flow_done_s, r.prefill_done_s)
+              for r in b.records]
+        assert ra == rb  # exact equality, not approx
+        assert a.events == b.events
+
+
+# ---------------------------------------------------------------------------
+# Dynamic semantics: join/leave, admission queueing, closed loop
+# ---------------------------------------------------------------------------
+class TestDynamics:
+    def test_arrival_reshapes_live_rates_event_mode(self):
+        """A second tenant arriving mid-flight must reduce the first flow's
+        rate at the arrival event (not at an epoch boundary) and delay its
+        TTFT vs running alone."""
+        cap = 30 * GBPS
+        solo = _one(65536, 0.875, cap_bps=cap, policy=Policy.EQUAL)
+        trace = [TraceRequest("a", 0.0, 65536, 0.875),
+                 TraceRequest("b", 1.0, 65536, 0.875)]
+        cs = ClusterSim(cap_bps=cap, policy=Policy.EQUAL)
+        res = cs.run(trace)
+        by = res.by_id()
+        assert by["a"].ttft_s > solo.ttft_s  # contention visible
+        assert res.reallocs >= 3  # admit a, admit b, departure(s)
+
+    def test_departure_returns_bandwidth(self):
+        """After the short flow leaves, the survivor must finish faster than
+        a permanently-halved allocation would allow."""
+        cap = 20 * GBPS
+        trace = [TraceRequest("small", 0.0, 16384, 0.5),
+                 TraceRequest("big", 0.0, 65536, 0.875)]
+        res = ClusterSim(cap_bps=cap, policy=Policy.EQUAL).run(trace)
+        sim = ServingSimulator()
+        w = WorkloadRequest("big", 65536, 0.875)
+        halved = sim.ttft_layerwise(w, rate_limit=cap / 2).ttft_s
+        assert res.by_id()["big"].ttft_s < halved
+
+    def test_admission_queue_fifo_under_max_flows(self):
+        trace = [TraceRequest("a", 0.0, 16384, 0.5),
+                 TraceRequest("b", 0.0, 16384, 0.5),
+                 TraceRequest("c", 0.0, 16384, 0.5)]
+        res = ClusterSim(cap_bps=80 * GBPS, max_flows=2).run(trace)
+        by = res.by_id()
+        assert by["a"].queue_s == 0.0 and by["b"].queue_s == 0.0
+        # c waits for the first transfer slot to free (a FLOW_DONE)
+        assert by["c"].queue_s > 0.0
+        first_done = min(by["a"].flow_done_s, by["b"].flow_done_s)
+        assert by["c"].admit_s == pytest.approx(first_done, abs=1e-9)
+        assert all(r.done for r in res.records)
+
+    def test_closed_loop_keeps_concurrency_at_clients(self):
+        cl = ClosedLoopTrace(clients=2, think_s=0.1, requests_per_client=3,
+                             seed=0)
+        res = ClusterSim(cap_bps=80 * GBPS).run(cl)
+        assert len(res.records) == 6 and all(r.done for r in res.records)
+        # per-client serialization: next arrival = previous first-token + think
+        by = res.by_id()
+        for c in range(2):
+            for i in range(1, 3):
+                prev, cur = by[f"c{c}.{i-1}"], by[f"c{c}.{i}"]
+                assert cur.arrival_s == pytest.approx(
+                    prev.prefill_done_s + 0.1, abs=1e-9)
+
+    def test_epoch_mode_defers_admission_to_boundary(self):
+        trace = [TraceRequest("a", 0.05, 16384, 0.5)]
+        res = ClusterSim(cap_bps=50 * GBPS, epoch_s=0.1).run(trace)
+        rec = res.records[0]
+        assert rec.admit_s == pytest.approx(0.1, abs=1e-12)  # next boundary
+        assert rec.queue_s == pytest.approx(0.05, abs=1e-12)
+
+    def test_event_counts_are_coherent(self):
+        trace = poisson_trace(6, 1.0, seed=3)
+        res = ClusterSim(cap_bps=50 * GBPS).run(trace)
+        ev = res.events
+        assert ev[EventKind.ARRIVE.value] == 6
+        assert ev[EventKind.FLOW_DONE.value] == 6
+        assert ev[EventKind.PREFILL_DONE.value] == 6
+        L = PaperComputeModel().num_layers
+        assert ev[EventKind.LAYER_READY.value] == 6 * L
+
+    def test_cal_stall_opt_beats_equal_on_poisson_workload(self):
+        """The §5.7 headline under Poisson arrivals: >= 1.2x lower total
+        added TTFT than equal sharing at moderate contention (the full
+        sweep lives in benchmarks/bench_cluster.py)."""
+        trace = poisson_trace(16, 1.0, seed=0)
+        sim = ServingSimulator()
+        base = {t.req_id: sim.ttft_layerwise(
+            WorkloadRequest(t.req_id, t.context, t.hit_rate)).ttft_s
+            for t in trace}
+        added = {}
+        for pol, margin in ((Policy.EQUAL, 0.0),
+                            (Policy.CAL_STALL_OPT, PAPER_MARGIN_BPS)):
+            res = ClusterSim(cap_bps=80 * GBPS, policy=pol,
+                             margin_bps=margin).run(trace)
+            added[pol] = summarize(res.records, base).added_ttft_total_s
+        assert added[Policy.EQUAL] >= 1.2 * added[Policy.CAL_STALL_OPT]
+
+
+# ---------------------------------------------------------------------------
+# Traces + metrics
+# ---------------------------------------------------------------------------
+class TestTraceFormat:
+    def test_poisson_trace_is_deterministic(self):
+        assert poisson_trace(10, 2.0, seed=5) == poisson_trace(10, 2.0, seed=5)
+        assert poisson_trace(10, 2.0, seed=5) != poisson_trace(10, 2.0, seed=6)
+
+    def test_save_load_round_trip(self, tmp_path):
+        trace = poisson_trace(5, 1.0, seed=1)
+        p = str(tmp_path / "t.json")
+        save_trace(p, trace)
+        assert load_trace(p) == trace
+
+    def test_load_rejects_foreign_json(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text('{"format": "something-else", "requests": []}')
+        with pytest.raises(ValueError):
+            load_trace(str(p))
+
+    def test_closed_loop_ids_unique_and_seeded(self):
+        a = ClosedLoopTrace(3, 0.5, 4, seed=9)
+        b = ClosedLoopTrace(3, 0.5, 4, seed=9)
+        ia, ib = a.initial(), b.initial()
+        assert [(r.req_id, r.context, r.hit_rate) for r in ia] \
+            == [(r.req_id, r.context, r.hit_rate) for r in ib]
+        assert len({r.req_id for r in ia}) == 3
+
+
+class TestMetrics:
+    def test_percentile_nearest_rank(self):
+        xs = [1.0, 2.0, 3.0, 4.0]
+        assert percentile(xs, 0.50) == 2.0
+        assert percentile(xs, 0.95) == 4.0
+        assert percentile(xs, 0.25) == 1.0
+        assert math.isnan(percentile([], 0.5))
+
+    def test_stall_and_queue_accounting(self):
+        rec = _one(65536, 0.5, cap_bps=None)
+        assert rec.queue_s == 0.0
+        # stall = ttft - compute: strictly positive (startup + first layer)
+        assert rec.stall_s > 0.0
+        assert rec.stall_s + rec.num_layers * rec.layer_compute_s \
+            == pytest.approx(rec.ttft_s, abs=1e-12)
+
+    def test_goodput_and_added_ttft(self):
+        trace = poisson_trace(5, 2.0, seed=2)
+        res = ClusterSim(cap_bps=None).run(trace)
+        m = summarize(res.records, {t.req_id: 0.0 for t in trace})
+        assert m.n == 5
+        assert m.added_ttft_total_s == pytest.approx(m.total_ttft_s)
+        assert m.goodput_rps > 0
+
+
+# ---------------------------------------------------------------------------
+# Event-clock wiring of planner decisions (Orchestrator + HybridReplanner)
+# ---------------------------------------------------------------------------
+class TestEventClockPlanning:
+    def test_orchestrator_plans_against_shared_pool_at_event_time(self):
+        from repro.core import Gateway, InMemoryStore, RadixIndex
+        from repro.core.scheduler import BandwidthPool
+        from repro.core.transport import VirtualClock
+        from repro.serving import Orchestrator
+
+        spec = ServingSimulator().kv_spec(8)
+        index, gw = RadixIndex(8), Gateway(InMemoryStore())
+        clock = VirtualClock()
+        pool = BandwidthPool(budget=1e6, policy=Policy.STALL_OPT)
+        orch = Orchestrator(index, gw, spec, theta_bytes=0,
+                            pool=pool, clock=clock)
+        import numpy as np
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, 100, size=64)
+        index.insert(toks)
+        p1 = orch.plan(toks, 1e-3, req_id="q1")
+        assert p1.rate is not None and orch.stats["reallocs"] == 1
+        r1 = pool.rates()["q1"]
+        clock.advance(0.25)  # second tenant arrives later in event time
+        p2 = orch.plan(toks, 1e-3, req_id="q2")
+        assert orch.stats["reallocs"] == 2 and pool.reallocs == 2
+        # the arrival event re-shaped q1's rate immediately (no epoch wait)
+        assert pool.rates()["q1"] < r1
+        assert p2.rate == pytest.approx(pool.rates()["q2"])
+
+    def test_same_time_arrivals_with_zero_byte_replan_do_not_crash(self):
+        """Regression: a flow re-planned to pure recompute (zero bytes) has
+        its FLOW_DONE event pushed at admission time; a same-timestamp ARRIVE
+        with an earlier heap sequence reallocates first and retires the flow
+        from the pool — the late completion must be a no-op, not a
+        KeyError."""
+        compute = PaperComputeModel()
+        spec = ServingSimulator().kv_spec(64)
+        rep = HybridReplanner(compute=compute, profile=S3_RDMA_AGG, spec=spec)
+        cs = ClusterSim(cap_bps=1e4, replanner=rep)  # starvation-level cap
+        res = cs.run([TraceRequest("a", 0.0, 65536, 0.875),
+                      TraceRequest("b", 0.0, 65536, 0.875)])
+        by = res.by_id()
+        assert by["a"].done and by["a"].replanned
+        assert by["a"].bytes_total == 0.0  # pure recompute
+        L = compute.num_layers
+        want = L * compute.layer_compute_s(65536, 0.0)
+        assert by["a"].ttft_s == pytest.approx(want, abs=1e-9)
+
+    def test_orchestrator_pure_recompute_fallback_retires_pool_flow(self):
+        """Regression: a pool-attached plan() that falls back to pure
+        recompute must not leave its flow holding bandwidth forever."""
+        from repro.core import Gateway, InMemoryStore, RadixIndex
+        from repro.core.scheduler import BandwidthPool
+        from repro.core.transport import VirtualClock
+        from repro.hybrid.planner import HybridPlanner
+        from repro.serving import Orchestrator
+
+        compute = PaperComputeModel()
+        spec = ServingSimulator().kv_spec(8)
+        index, gw = RadixIndex(8), Gateway(InMemoryStore())
+        pool = BandwidthPool(budget=1.0, policy=Policy.CAL_STALL_OPT)  # ~no bw
+        orch = Orchestrator(
+            index, gw, spec, theta_bytes=0, pool=pool, clock=VirtualClock(),
+            hybrid=HybridPlanner(compute=compute, profile=S3_RDMA_AGG))
+        import numpy as np
+        toks = np.arange(64)
+        index.insert(toks)
+        plan = orch.plan(toks, 10.0, req_id="q1")
+        assert plan.delivery is None  # recompute fallback
+        assert orch.stats["fallbacks"] == 1
+        assert pool.live_ids() == set()  # retired, not leaked
+        assert pool.reallocate(1.0) == {}
+
+    def test_replanner_history_is_bounded(self):
+        compute = PaperComputeModel()
+        spec = ServingSimulator().kv_spec(64)
+        rep = HybridReplanner(compute=compute, profile=S3_RDMA_AGG, spec=spec,
+                              max_history=4)
+        rep.clock = type("C", (), {"now": staticmethod(lambda: 0.0)})()
+        sim = ServingSimulator(compute)
+        flow = sim.flow_request(WorkloadRequest("r", 16384, 0.875))
+        rep.register("r", 16384)
+        for _ in range(9):
+            assert rep(flow, 2 * GBPS) is not None
+        assert len(rep.history) == 4
+
+    def test_replanner_history_is_event_time_stamped(self):
+        compute = PaperComputeModel()
+        spec = ServingSimulator().kv_spec(64)
+        rep = HybridReplanner(compute=compute, profile=S3_RDMA_AGG, spec=spec)
+        cs = ClusterSim(cap_bps=2 * GBPS, replanner=rep)
+        t0 = 3.5
+        cs.run([TraceRequest("r0", t0, 16384, 0.875)])
+        assert len(rep.history) == 1
+        now, req_id, fetch_chunks, rate = rep.history[0]
+        assert now == t0 and req_id == "r0"
+        assert 0 < fetch_chunks < 16384 * 0.875 // 64
+        assert rate == pytest.approx(2 * GBPS)

@@ -34,6 +34,12 @@ def test_layerwise_overlap():
     assert "B_req" in out
 
 
+def test_cluster_trace():
+    out = _run_example("cluster_trace.py")
+    assert "OK: JSON replay reproduces bit-identical metrics" in out
+    assert "cal-stall-opt" in out
+
+
 def test_hybrid_prefill():
     out = _run_example("hybrid_prefill.py")
     assert "OK: hybrid <= min(pure-fetch, pure-recompute)" in out

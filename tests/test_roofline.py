@@ -46,6 +46,20 @@ class TestCollectiveParsing:
         assert collective_bytes_from_hlo(c.as_text()) == 0.0
 
 
+def _cost_analysis_is_mapping():
+    """Newer jax returns one dict from ``Compiled.cost_analysis()``; older
+    builds return a per-device list, which this test's indexing (and the
+    roofline pass it documents) does not support."""
+    try:
+        ca = jax.jit(lambda x: x + 1.0).lower(1.0).compile().cost_analysis()
+        return hasattr(ca, "keys")
+    except Exception:  # pragma: no cover - environment dependent
+        return False
+
+
+@pytest.mark.skipif(not _cost_analysis_is_mapping(),
+                    reason="Compiled.cost_analysis() is not a dict on this "
+                           "jax build (old per-device list API)")
 class TestScanBodyOnce:
     def test_cost_analysis_counts_scan_body_once(self):
         """The measurement pitfall that forces the unrolled roofline pass:

@@ -136,6 +136,53 @@ def test_added_ttft_decreases_with_rate():
     assert added_ttft(r, 1e9) > added_ttft(r, 5e9) > added_ttft(r, 2e10)
 
 
+# ---------------------------------------------------------------------------
+# allocate() invariants across ALL policies (property-style)
+# ---------------------------------------------------------------------------
+ALL_POLICIES = list(Policy)
+
+
+@given(flow_strategy, st.floats(1e3, 1e12))
+@settings(max_examples=60, deadline=None)
+def test_property_allocate_never_exceeds_budget(sc, budget):
+    """No policy may overdraw the cap (stall-opt may undershoot when every
+    request is already at its zero-stall cap)."""
+    reqs = _flows(sc)
+    for pol in ALL_POLICIES:
+        alloc = allocate(reqs, budget, pol, margin=0.0)
+        assert sum(alloc.values()) <= budget * (1 + 1e-9), pol
+        assert all(v >= 0.0 for v in alloc.values()), pol
+
+
+@given(flow_strategy, st.floats(1e3, 1e12), st.integers(0, 2**32))
+@settings(max_examples=60, deadline=None)
+def test_property_allocate_permutation_invariant(sc, budget, seed):
+    """Request order must not change anyone's rate."""
+    import random
+    reqs = _flows(sc)
+    shuffled = list(reqs)
+    random.Random(seed).shuffle(shuffled)
+    for pol in ALL_POLICIES:
+        a = allocate(reqs, budget, pol)
+        b = allocate(shuffled, budget, pol)
+        for r in reqs:
+            assert a[r.req_id] == pytest.approx(b[r.req_id], rel=1e-9,
+                                                abs=1e-12), pol
+
+
+@given(flow_strategy, st.floats(1e3, 1e11), st.floats(1.01, 4.0))
+@settings(max_examples=60, deadline=None)
+def test_property_allocate_monotone_in_budget(sc, budget, grow):
+    """Raising the cap never lowers any request's rate (water-filling is
+    per-request monotone; the proportional policies are trivially so)."""
+    reqs = _flows(sc)
+    for pol in ALL_POLICIES:
+        lo = allocate(reqs, budget, pol)
+        hi = allocate(reqs, budget * grow, pol)
+        for r in reqs:
+            assert hi[r.req_id] >= lo[r.req_id] * (1 - 1e-9), pol
+
+
 class TestDegenerateDemands:
     """Proportional policies must not divide by zero when every request has
     zero bytes (KV_PROP) or zero slack (BW_PROP) — fall back to EQUAL."""
@@ -218,6 +265,86 @@ class TestBandwidthPool:
         pool.submit(FlowRequest("a", 10.0, 1.0, 1))
         pool.start_epoch(1.0)
         assert pool._flows["a"].remaining_bytes == pytest.approx(10.0)
+
+    def test_start_epoch_shares_reallocate_core(self):
+        """The epoch API is a thin wrapper over the event-callback core:
+        both counters advance, and calling `reallocate` directly (as the
+        cluster sim does) admits pending flows identically."""
+        pool = BandwidthPool(budget=100.0, policy=Policy.EQUAL)
+        pool.submit(FlowRequest("a", 100.0, 1.0, 2))
+        assert pool.start_epoch(0.0) == {"a": 100.0}
+        assert (pool.epochs, pool.reallocs) == (1, 1)
+        pool.submit(FlowRequest("b", 100.0, 1.0, 2))
+        assert pool.reallocate(0.05) == {"a": 50.0, "b": 50.0}
+        assert (pool.epochs, pool.reallocs) == (1, 2)  # event, not epoch
+
+    def test_complete_releases_at_next_reallocation(self):
+        """Externally-clocked completion (event mode): the flow keeps its
+        rate until `reallocate`, then its bandwidth returns; `advance` never
+        re-reports it."""
+        pool = BandwidthPool(budget=100.0, policy=Policy.EQUAL)
+        pool.submit(FlowRequest("a", 1e6, 1.0, 10))
+        pool.submit(FlowRequest("b", 1e6, 1.0, 10))
+        pool.start_epoch(0.0)
+        pool.complete("a")
+        assert pool.rates()["a"] == 50.0  # conservative rule: held until...
+        assert pool.live_ids() == {"b"}
+        assert pool.reallocate(0.5) == {"b": 100.0}  # ...the next realloc
+        assert pool.advance(1.0) == []  # not re-reported
+
+    @given(st.integers(0, 2**32))
+    @settings(max_examples=30, deadline=None)
+    def test_property_advance_conserves_bytes_across_join_leave(self, seed):
+        """Under arbitrary submit/start_epoch/advance/complete sequences,
+        every flow's delivered bytes equal min(total, sum of rate*dt while
+        live) and completions are reported exactly once."""
+        import random
+        rng = random.Random(seed)
+        pool = BandwidthPool(budget=rng.uniform(10.0, 1e4),
+                             policy=rng.choice([Policy.EQUAL,
+                                                Policy.STALL_OPT,
+                                                Policy.KV_PROP]))
+        expect_remaining: dict[str, float] = {}
+        totals: dict[str, float] = {}
+        reported: set[str] = set()
+        now, next_id = 0.0, 0
+        for _ in range(rng.randint(5, 40)):
+            op = rng.random()
+            if op < 0.35:  # join
+                fid = f"f{next_id}"
+                next_id += 1
+                total = rng.uniform(0.0, 5e3)
+                pool.submit(FlowRequest(fid, total / 4, rng.uniform(0.1, 2.0), 4))
+                totals[fid] = total
+            elif op < 0.6:  # epoch boundary: pending admitted, rates re-fixed
+                pool.start_epoch(now)
+                for fid, f in pool._flows.items():
+                    if fid not in expect_remaining:
+                        expect_remaining[fid] = totals[fid]
+            elif op < 0.85:  # progress
+                dt = rng.uniform(0.0, 2.0)
+                now += dt
+                rates = pool.rates()
+                done = pool.advance(dt)
+                for fid in done:
+                    assert fid not in reported, "completion reported twice"
+                    reported.add(fid)
+                for fid, rate in rates.items():
+                    if fid in expect_remaining:
+                        expect_remaining[fid] = max(
+                            0.0, expect_remaining[fid] - rate * dt)
+            else:  # external completion (event-mode leave)
+                live = sorted(pool.live_ids())
+                if live:
+                    fid = rng.choice(live)
+                    pool.complete(fid)
+                    expect_remaining[fid] = 0.0
+                    reported.add(fid)  # complete() counts as the report
+            for fid, want in expect_remaining.items():
+                if fid in pool._flows:
+                    got = pool.remaining_bytes(fid)
+                    assert got == pytest.approx(want, rel=1e-9, abs=1e-6), fid
+                    assert got >= 0.0
 
     def test_resubmit_of_unreported_completion_is_not_reported_early(self):
         """A completed-but-unreported flow whose id is re-admitted fresh in
