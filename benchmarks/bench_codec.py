@@ -1,0 +1,176 @@
+"""KV wire-codec benchmark (DESIGN.md §Codec).
+
+Sweeps codec x context length x bandwidth and reports, per point:
+
+  * wire-byte reduction vs the raw KV_L2TD layout (int4 must reach >= 3.5x
+    at the paper's G=64 — asserted);
+  * layerwise TTFT vs the uncompressed baseline through the calibrated
+    transport model (`ServingSimulator`, Eq. 3 closed forms);
+  * the hybrid compute-or-load split at each rate — compression shifts the
+    crossover toward fetching (fetch_chunks monotone in codec ratio —
+    asserted at the constrained-bandwidth points);
+  * end-to-end logit error through the real `ServingEngine` (qwen3-0.6b
+    smoke model, bytes round-tripped through the object store): the identity
+    codec must be bit-for-bit equal to the raw path, quantized codecs report
+    max |dlogit| vs the no-cache prefill.
+
+Run standalone:  PYTHONPATH=src python benchmarks/bench_codec.py [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core.compute_model import PaperComputeModel
+from repro.core.simulator import ServingSimulator, WorkloadRequest
+from repro.core.transport import S3_RDMA_AGG
+from repro.core.types import KVSpec
+from repro.hybrid.planner import plan_split
+
+try:  # runnable both as a package module and as a script
+    from .common import row, timeit
+except ImportError:  # pragma: no cover - script mode
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from common import row, timeit
+
+GBPS = 1e9 / 8
+CODECS = ("identity", "int8", "int4")
+G = 64  # the paper's default chunk granularity
+CONTEXTS = ((4096, 0.875), (16384, 0.875), (65536, 0.5))
+RATES_GBPS = (1.0, 4.0, 16.0, 100.0)
+INT4_MIN_REDUCTION = 3.5
+
+
+def _spec(codec: str) -> KVSpec:
+    return ServingSimulator(codec=codec).kv_spec(G)
+
+
+def run_wire_bytes() -> list[str]:
+    rows = []
+    base = _spec("identity")
+    for codec in CODECS:
+        spec = _spec(codec)
+        reduction = base.wire_chunk_bytes / spec.wire_chunk_bytes
+        rows.append(row(
+            f"codec/wire_bytes/{codec}", 0.0,
+            f"S_wire={spec.wire_per_layer_chunk_bytes};"
+            f"reduction_x={reduction:.2f};wire_ratio={spec.wire_ratio:.4f}"))
+        if codec == "int4" and reduction < INT4_MIN_REDUCTION:
+            raise AssertionError(
+                f"int4 wire reduction {reduction:.2f}x < {INT4_MIN_REDUCTION}x")
+    return rows
+
+
+def run_ttft_sweep(smoke: bool = False) -> list[str]:
+    """Layerwise TTFT per codec across the bandwidth sweep; the uncompressed
+    identity run at the same (context, rate) is the baseline."""
+    rows = []
+    contexts = CONTEXTS[1:2] if smoke else CONTEXTS
+    rates = RATES_GBPS[:2] if smoke else RATES_GBPS
+    for ctx, hit in contexts:
+        w = WorkloadRequest(f"{ctx}", ctx, hit, G)
+        for gbps in rates:
+            base_ttft = ServingSimulator(codec="identity").ttft_layerwise(
+                w, rate_limit=gbps * GBPS).ttft_s
+            for codec in CODECS:
+                r = ServingSimulator(codec=codec).ttft_layerwise(
+                    w, rate_limit=gbps * GBPS)
+                rows.append(row(
+                    f"codec/ttft/{ctx//1024}K_h{hit}/r{gbps:g}G/{codec}",
+                    r.ttft_s * 1e6,
+                    f"baseline_us={base_ttft*1e6:.0f};"
+                    f"speedup_x={base_ttft/r.ttft_s:.3f};"
+                    f"stalled={int(r.stalled)}"))
+    return rows
+
+
+def run_hybrid_shift(smoke: bool = False) -> list[str]:
+    """Compute-or-load split per codec at constrained rates: fewer wire
+    bytes make fetching cheaper, so the planner's fetch_chunks must be
+    monotone non-decreasing from identity -> int8 -> int4."""
+    rows = []
+    compute = PaperComputeModel()
+    # smoke keeps the 16K mid-bandwidth points, where the shift is interior
+    # (4K is session-setup-dominated: every codec chooses pure recompute)
+    contexts = CONTEXTS[1:2] if smoke else CONTEXTS
+    rates = RATES_GBPS[:2] if smoke else RATES_GBPS
+    for ctx, hit in contexts:
+        n = int(ctx * hit) // G
+        for gbps in rates:
+            fetched = []
+            for codec in CODECS:
+                spec = _spec(codec)
+                split = plan_split(ctx, n, spec, compute, S3_RDMA_AGG,
+                                   rate=gbps * GBPS)
+                fetched.append(split.fetch_chunks)
+                rows.append(row(
+                    f"codec/hybrid/{ctx//1024}K_h{hit}/r{gbps:g}G/{codec}",
+                    split.ttft_s * 1e6,
+                    f"m={split.fetch_chunks}/{n};"
+                    f"fetch_frac={split.fetch_fraction:.3f}"))
+            if not (fetched[0] <= fetched[1] <= fetched[2]):
+                raise AssertionError(
+                    f"crossover did not shift toward fetch at "
+                    f"{ctx}/{hit}@{gbps}G: {dict(zip(CODECS, fetched))}")
+    return rows
+
+
+def run_engine_accuracy(smoke: bool = False) -> list[str]:
+    """Real bytes through the object store + real JAX compute: identity must
+    be bit-exact vs the no-cache prefill path; quantized codecs report their
+    end-to-end max |dlogit|."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core import Gateway, InMemoryStore, RadixIndex
+    from repro.models import build_model
+    from repro.serving import Orchestrator, ServingEngine
+
+    g = 8  # small chunks: the smoke model serves 48-token prompts
+    cfg = get_smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(0, 200, size=48)
+    codecs = ("identity", "int4") if smoke else CODECS
+
+    rows = []
+    for codec in codecs:
+        spec = cfg.kv_spec(g, dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize,
+                           codec=codec)
+        store = InMemoryStore()
+        orch = Orchestrator(RadixIndex(g), Gateway(store), spec, theta_bytes=0)
+        engine = ServingEngine(model, params, orch)
+        cold = engine.submit(prompt, "cold")  # no-cache prefill reference
+        wall = timeit(lambda: engine.submit(prompt, "warm"), repeat=3, warmup=1)
+        warm = engine.submit(prompt, "warm")
+        assert warm.hit
+        dlogit = float(np.abs(warm.logits - cold.logits).max())
+        bitexact = int(np.array_equal(warm.logits, cold.logits))
+        if codec == "identity" and not bitexact:
+            raise AssertionError("identity codec not bit-exact vs raw path")
+        rows.append(row(
+            f"codec/engine/{codec}", wall * 1e6,
+            f"max_dlogit={dlogit:.5f};bitexact={bitexact};"
+            f"wire_bytes={store.stats.snapshot()['bytes_written']}"))
+    return rows
+
+
+def run(smoke: bool = False) -> list[str]:
+    rows = run_wire_bytes()
+    rows += run_ttft_sweep(smoke)
+    rows += run_hybrid_shift(smoke)
+    rows += run_engine_accuracy(smoke)
+    return rows
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    print("name,us_per_call,derived")
+    for line in run(smoke=smoke):
+        print(line, flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -11,8 +11,15 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_cluster               §5.7 under Poisson arrivals (event-driven)
   bench_granularity           Table A6 + Fig 3 (recompute vs granularity)
   bench_hybrid                compute-or-load crossover (Cake-style sweep)
+  bench_codec                 KV wire codecs (DESIGN.md §Codec): bytes/TTFT/accuracy
   bench_kernels               Pallas kernels vs oracles
   bench_engine                real serving engine (cold/warm, batching)
+
+Usage:
+  python -m benchmarks.run [--list] [--only <name> [--only <name> ...]]
+
+``--only`` accepts the short module name with or without the ``bench_``
+prefix and may repeat; ``--list`` prints the registered modules and exits.
 """
 from __future__ import annotations
 
@@ -20,20 +27,54 @@ import sys
 import traceback
 
 from . import (bench_aggregation, bench_bandwidth_sensitivity, bench_cluster,
-               bench_engine, bench_granularity, bench_hybrid, bench_kernels,
-               bench_overlap, bench_request_overhead, bench_scheduler,
-               bench_transport, bench_ttft)
+               bench_codec, bench_engine, bench_granularity, bench_hybrid,
+               bench_kernels, bench_overlap, bench_request_overhead,
+               bench_scheduler, bench_transport, bench_ttft)
 
 MODULES = [bench_transport, bench_request_overhead, bench_aggregation,
            bench_overlap, bench_ttft, bench_bandwidth_sensitivity,
            bench_scheduler, bench_cluster, bench_granularity, bench_hybrid,
-           bench_kernels, bench_engine]
+           bench_codec, bench_kernels, bench_engine]
 
 
-def main() -> None:
+def _short_name(mod) -> str:
+    return mod.__name__.rsplit(".", 1)[-1]
+
+
+def _select(argv: list[str]) -> list:
+    """Parse --list/--only; returns the modules to run (exits on --list)."""
+    if "--list" in argv:
+        for mod in MODULES:
+            print(_short_name(mod))
+        raise SystemExit(0)
+    only: list[str] = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--only":
+            try:
+                only.append(next(it))
+            except StopIteration:
+                raise SystemExit("--only needs a module name")
+        elif arg.startswith("--only="):
+            only.append(arg.split("=", 1)[1])
+    if not only:
+        return MODULES
+    by_name = {_short_name(m): m for m in MODULES}
+    by_name.update({_short_name(m).removeprefix("bench_"): m for m in MODULES})
+    picked = []
+    for name in only:
+        if name not in by_name:
+            raise SystemExit(
+                f"unknown benchmark {name!r}; run with --list to see names")
+        picked.append(by_name[name])
+    return picked
+
+
+def main(argv: list[str] | None = None) -> None:
+    modules = _select(sys.argv[1:] if argv is None else argv)
     print("name,us_per_call,derived")
     failures = 0
-    for mod in MODULES:
+    for mod in modules:
         try:
             for line in mod.run():
                 print(line, flush=True)

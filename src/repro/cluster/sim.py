@@ -125,12 +125,14 @@ class ClusterSim:
                  session_setup: bool = True,
                  replanner=None,
                  max_flows: Optional[int] = None,
-                 epoch_s: Optional[float] = None) -> None:
+                 epoch_s: Optional[float] = None,
+                 codec: str = "identity") -> None:
         if mode not in ("layerwise", "chunkwise"):
             raise ValueError(f"unknown mode {mode!r}")
         self.compute = compute or PaperComputeModel()
         self.profile = profile
         self.mode = mode
+        self.codec = codec
         self.session_setup = session_setup
         self.replanner = replanner
         self.max_flows = max_flows
@@ -149,7 +151,7 @@ class ClusterSim:
             return self._spec_arg
         return KVSpec(num_layers=self.compute.num_layers,
                       chunk_tokens=chunk_tokens, num_kv_heads=8, head_dim=128,
-                      dtype_bytes=2)
+                      dtype_bytes=2, codec=self.codec)
 
     # -- one run --------------------------------------------------------------
     def run(self, trace: Union[Sequence[TraceRequest], ClosedLoopTrace]
@@ -290,7 +292,8 @@ class ClusterSim:
     def _flow_request(self, tr: TraceRequest) -> FlowRequest:
         spec = self.kv_spec(tr.chunk_tokens)
         n_chunks = tr.cached_tokens // tr.chunk_tokens
-        layer_bytes = float(n_chunks * spec.per_layer_chunk_bytes)
+        # per-flow bandwidth demand is the codec-encoded (wire) byte count
+        layer_bytes = float(n_chunks * spec.wire_per_layer_chunk_bytes)
         if self.mode == "chunkwise":
             # the pool waterfills on (s_i, c_i); spread the bulk transfer
             # evenly so zero_stall_rate stays meaningful
@@ -311,7 +314,7 @@ class ClusterSim:
             rate = alloc[tr.req_id]
         L = spec.num_layers
         layer_bytes = fr.bytes_per_layer
-        n_chunks = int(round(layer_bytes / spec.per_layer_chunk_bytes))
+        n_chunks = int(round(layer_bytes / spec.wire_per_layer_chunk_bytes))
         rec = next(r for r in reversed(self._records) if r.req_id == tr.req_id)
         rec.admit_s = now
         rec.num_layers = L

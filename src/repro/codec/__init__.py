@@ -1,0 +1,14 @@
+# KV wire-codec subsystem (DESIGN.md §Codec): pluggable transforms between
+# model-dtype KV chunk slices and the bytes that live in the object store /
+# cross the wire.  The identity codec is bit-exact; the quantized codecs trade
+# bounded logit error for a 2-4x wire-byte reduction (CacheGen/LMCache-style).
+from .base import CODECS, IdentityCodec, KVCodec, codec_for_id, get_codec
+from .quant import Int4Codec, Int8Codec
+from .ref import (dequantize_per_channel, pack_int4, quantize_per_channel,
+                  unpack_int4)
+
+__all__ = [
+    "CODECS", "IdentityCodec", "Int4Codec", "Int8Codec", "KVCodec",
+    "codec_for_id", "dequantize_per_channel", "get_codec", "pack_int4",
+    "quantize_per_channel", "unpack_int4",
+]

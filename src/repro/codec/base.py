@@ -1,0 +1,98 @@
+"""Codec interface + identity codec + registry (DESIGN.md §Codec).
+
+A codec maps one chunk's per-layer K/V slices to the layer-major bytes that
+live in the object store.  The layer-major *envelope* (KV_L2TD, §3.3) is
+shared by every codec — only the per-layer stride changes
+(``spec.wire_per_layer_chunk_bytes``) — so server-side aggregation stays pure
+range arithmetic whatever the codec.
+
+Encode runs once, at commit time, against the model-dtype arrays; decode runs
+per aggregated layer payload on the client (numpy here; the serving engine
+prefers the fused Pallas dequant kernel when the build supports it).
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+
+import numpy as np
+
+from repro.core.layout import pack_chunk, unpack_layer_payload, wire_dtype
+from repro.core.types import CODEC_IDENTITY, CODEC_WIRE_IDS, KVSpec
+
+
+def to_wire_words(arr: np.ndarray) -> np.ndarray:
+    """Reinterpret to the unsigned word of the same width (bit-exact; bf16
+    crosses as uint16)."""
+    arr = np.asarray(arr)
+    word = {1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize]
+    return arr.view(word)
+
+
+class KVCodec(ABC):
+    """One wire codec: name, wire id, and the two byte transforms."""
+
+    name: str
+    bits: int  # quantized bits per value; 0 = raw model dtype
+
+    @property
+    def codec_id(self) -> int:
+        return CODEC_WIRE_IDS[self.name]
+
+    @property
+    def lossless(self) -> bool:
+        return self.bits == 0
+
+    @abstractmethod
+    def encode_chunk(self, k: np.ndarray, v: np.ndarray, spec: KVSpec) -> bytes:
+        """``k``/``v``: [L, G, width] arrays in the model dtype (bf16 may
+        arrive either typed via ml_dtypes or as uint16 wire words) →
+        ``spec.wire_chunk_bytes`` encoded bytes."""
+
+    @abstractmethod
+    def decode_layer_payload(self, payload: bytes, num_chunks: int,
+                             spec: KVSpec, dtype) -> tuple[np.ndarray, np.ndarray]:
+        """One aggregated layer payload (N encoded layer slices in prefix
+        order) → (k, v) [N*G, width] arrays of ``dtype``."""
+
+
+class IdentityCodec(KVCodec):
+    """Bit-exact raw codec — the KV_L2TD layout of `core.layout` unchanged."""
+
+    name = CODEC_IDENTITY
+    bits = 0
+
+    def encode_chunk(self, k, v, spec):
+        return pack_chunk(to_wire_words(k), to_wire_words(v), spec)
+
+    def decode_layer_payload(self, payload, num_chunks, spec, dtype):
+        k, v = unpack_layer_payload(payload, num_chunks, spec)
+        dtype = np.dtype(dtype)
+        assert wire_dtype(spec.dtype_bytes).itemsize == dtype.itemsize, \
+            (spec.dtype_bytes, dtype)
+        return k.view(dtype), v.view(dtype)  # bit view, never a value cast
+
+
+CODECS: dict[str, KVCodec] = {}
+
+
+def register(codec: KVCodec) -> KVCodec:
+    CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> KVCodec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown wire codec {name!r}; "
+                         f"known: {sorted(CODECS)}") from None
+
+
+def codec_for_id(codec_id: int) -> KVCodec:
+    for codec in CODECS.values():
+        if codec.codec_id == codec_id:
+            return codec
+    raise ValueError(f"unknown wire codec id {codec_id}")
+
+
+register(IdentityCodec())

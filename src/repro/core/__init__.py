@@ -19,7 +19,8 @@ from .simulator import (PAPER_MARGIN_BPS, WORKLOAD_A, WORKLOAD_B, WORKLOAD_C,
 from .transport import (LOCAL_DRAM, PROFILES, S3_RDMA_AGG, S3_RDMA_BATCH,
                         S3_RDMA_BUFFER, S3_RDMA_DIRECT, S3_TCP, VirtualClock,
                         WallClock)
-from .types import (Delivery, FlowRequest, KVSpec, LayerReady, MatchResult,
-                    Timing)
+from .types import (CODEC_IDENTITY, CODEC_INT4, CODEC_INT8, CODEC_NAMES,
+                    CODEC_WIRE_IDS, Delivery, FlowRequest, KVSpec, LayerReady,
+                    MatchResult, Timing)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

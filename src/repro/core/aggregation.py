@@ -10,6 +10,11 @@ start layer l without waiting for the whole prefix.
 Timing is a three-stage pipeline (storage read → assemble → wire write): the
 server reads layer l+1 while assembling layer l and writing layer l-1.  The
 recurrences below model exactly that; bytes are moved for real.
+
+Wire codecs (DESIGN.md §Codec) are transparent here: stored objects are
+encoded, the descriptor's per-layer stride is the *encoded* stride, and the
+server aggregates and delivers compressed layer payloads — every byte count
+below is wire bytes.  Decode happens on the client.
 """
 from __future__ import annotations
 

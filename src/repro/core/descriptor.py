@@ -19,10 +19,10 @@ from .hashing import KEY_BYTES
 from .types import Delivery, KVSpec
 
 _MAGIC = b"OBJC"
-_VERSION = 1
-# magic, version, num_keys, num_layers, chunk_tokens, per_layer_chunk_bytes,
-# delivery, rdma_addr, rdma_rkey, rdma_len
-_HEADER = struct.Struct("<4sBIIIIBQIQ")
+_VERSION = 2  # v2 adds the wire-codec id (DESIGN.md §Codec)
+# magic, version, codec_id, num_keys, num_layers, chunk_tokens,
+# per_layer_chunk_bytes (wire stride), delivery, rdma_addr, rdma_rkey, rdma_len
+_HEADER = struct.Struct("<4sBBIIIIBQIQ")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,9 +41,10 @@ class Descriptor:
     chunk_keys: tuple[bytes, ...]  # [H_0 .. H_{N-1}], matched prefix chunks
     num_layers: int  # L
     chunk_tokens: int  # G
-    per_layer_chunk_bytes: int  # S
+    per_layer_chunk_bytes: int  # S_wire: per-layer stride of the STORED object
     delivery: Delivery
     rdma_target: RdmaTarget
+    codec_id: int = 0  # wire codec of the stored chunks (DESIGN.md §Codec)
 
     # -- derived ------------------------------------------------------------
     @property
@@ -52,25 +53,27 @@ class Descriptor:
 
     @property
     def total_bytes(self) -> int:
-        """W = N * L * S (Eq. 2)."""
+        """W = N * L * S_wire (Eq. 2, over the encoded layout)."""
         return self.num_chunks * self.num_layers * self.per_layer_chunk_bytes
 
     @property
     def layer_payload_bytes(self) -> int:
-        """Bytes of one aggregated layer payload (N * S)."""
+        """Bytes of one aggregated (encoded) layer payload (N * S_wire)."""
         return self.num_chunks * self.per_layer_chunk_bytes
 
     # -- wire ----------------------------------------------------------------
     def to_wire(self) -> bytes:
         head = _HEADER.pack(
-            _MAGIC, _VERSION, self.num_chunks, self.num_layers, self.chunk_tokens,
-            self.per_layer_chunk_bytes, 1 if self.delivery is Delivery.LAYERWISE else 0,
+            _MAGIC, _VERSION, self.codec_id, self.num_chunks, self.num_layers,
+            self.chunk_tokens, self.per_layer_chunk_bytes,
+            1 if self.delivery is Delivery.LAYERWISE else 0,
             self.rdma_target.addr, self.rdma_target.rkey, self.rdma_target.length)
         return head + b"".join(self.chunk_keys)
 
     @classmethod
     def from_wire(cls, buf: bytes) -> "Descriptor":
-        magic, ver, n, L, G, S, lw, addr, rkey, length = _HEADER.unpack_from(buf, 0)
+        magic, ver, codec_id, n, L, G, S, lw, addr, rkey, length = \
+            _HEADER.unpack_from(buf, 0)
         if magic != _MAGIC or ver != _VERSION:
             raise ValueError("not an ObjectCache descriptor")
         off = _HEADER.size
@@ -78,7 +81,7 @@ class Descriptor:
         if len(buf) != off + n * KEY_BYTES:
             raise ValueError("descriptor length mismatch")
         return cls(keys, L, G, S, Delivery.LAYERWISE if lw else Delivery.CHUNKWISE,
-                   RdmaTarget(addr, rkey, length))
+                   RdmaTarget(addr, rkey, length), codec_id)
 
     def to_json(self) -> str:
         return json.dumps({
@@ -87,12 +90,17 @@ class Descriptor:
             "chunk_tokens": self.chunk_tokens,
             "per_layer_chunk_bytes": self.per_layer_chunk_bytes,
             "delivery": self.delivery.value,
+            "codec_id": self.codec_id,
             "rdma_target": dataclasses.asdict(self.rdma_target),
         })
 
 
 def make_descriptor(chunk_keys: list[bytes] | tuple[bytes, ...], spec: KVSpec,
                     delivery: Delivery, rdma: RdmaTarget | None = None) -> Descriptor:
-    rdma = rdma or RdmaTarget(0, 0, len(chunk_keys) * spec.chunk_bytes)
+    """Descriptor for ``spec``'s deployment: the byte arithmetic (stride,
+    RDMA buffer length) is over the *encoded* layout, since that is what the
+    storage server range-reads and what crosses the wire."""
+    rdma = rdma or RdmaTarget(0, 0, len(chunk_keys) * spec.wire_chunk_bytes)
     return Descriptor(tuple(chunk_keys), spec.num_layers, spec.chunk_tokens,
-                      spec.per_layer_chunk_bytes, delivery, rdma)
+                      spec.wire_per_layer_chunk_bytes, delivery, rdma,
+                      spec.codec_id)

@@ -9,6 +9,11 @@ Physical layout of one immutable chunk object::
 Server-side aggregation never reshapes stored bytes — it only changes the
 *readout order*: one layerwise payload concatenates the layer-l slices of all
 matched chunks in prefix order.
+
+This module is the *identity* (raw) wire format.  Quantized wire codecs
+(DESIGN.md §Codec) reuse the same layer-major envelope with a smaller
+per-layer stride ``spec.wire_per_layer_chunk_bytes``; their transforms live
+in ``src/repro/codec/``.
 """
 from __future__ import annotations
 
@@ -53,8 +58,10 @@ def unpack_chunk(buf: bytes, spec: KVSpec) -> tuple[np.ndarray, np.ndarray]:
 
 
 def layer_range(layer: int, spec: KVSpec) -> tuple[int, int]:
-    """Byte range [l*S, (l+1)*S) of layer ``l`` inside any chunk (§3.2)."""
-    S = spec.per_layer_chunk_bytes
+    """Byte range [l*S, (l+1)*S) of layer ``l`` inside any *stored* chunk
+    (§3.2).  S is the wire stride: under a quantized codec the stored object
+    is the encoded one, and the range arithmetic follows its smaller S."""
+    S = spec.wire_per_layer_chunk_bytes
     return layer * S, (layer + 1) * S
 
 

@@ -40,17 +40,29 @@ class ObjectStore(ABC):
 
 
 class StoreStats:
+    """Thread-safe operation counters.
+
+    Stores mutate through :meth:`add` and readers use :meth:`snapshot`; both
+    take the internal lock, so a snapshot is a *consistent* cut (a concurrent
+    get can never be observed with its byte count but not its op count).
+    """
+
+    _FIELDS = ("puts", "gets", "range_gets", "bytes_read", "bytes_written",
+               "dedup_hits")
+
     def __init__(self) -> None:
-        self.puts = 0
-        self.gets = 0
-        self.range_gets = 0
-        self.bytes_read = 0
-        self.bytes_written = 0
-        self.dedup_hits = 0
+        for f in self._FIELDS:
+            setattr(self, f, 0)
         self._lock = threading.Lock()
 
+    def add(self, **deltas: int) -> None:
+        with self._lock:
+            for field, delta in deltas.items():
+                setattr(self, field, getattr(self, field) + delta)
+
     def snapshot(self) -> dict:
-        return {k: v for k, v in self.__dict__.items() if not k.startswith("_")}
+        with self._lock:
+            return {f: getattr(self, f) for f in self._FIELDS}
 
 
 class InMemoryStore(ObjectStore):
@@ -62,24 +74,21 @@ class InMemoryStore(ObjectStore):
     def put(self, key: bytes, data: bytes) -> None:
         with self._lock:
             if key in self._data:
-                self.stats.dedup_hits += 1  # immutable + content-addressed
+                self.stats.add(dedup_hits=1)  # immutable + content-addressed
                 return
             self._data[key] = bytes(data)
-            self.stats.puts += 1
-            self.stats.bytes_written += len(data)
+            self.stats.add(puts=1, bytes_written=len(data))
 
     def get(self, key: bytes) -> bytes:
         with self._lock:
             data = self._data[key]
-            self.stats.gets += 1
-            self.stats.bytes_read += len(data)
+            self.stats.add(gets=1, bytes_read=len(data))
             return data
 
     def range_get(self, key: bytes, offset: int, length: int) -> bytes:
         with self._lock:
             data = self._data[key]
-            self.stats.range_gets += 1
-            self.stats.bytes_read += length
+            self.stats.add(range_gets=1, bytes_read=length)
             return data[offset:offset + length]
 
     def contains(self, key: bytes) -> bool:
@@ -116,29 +125,26 @@ class FileStore(ObjectStore):
         path = self._path(key)
         with self._lock:
             if os.path.exists(path):
-                self.stats.dedup_hits += 1
+                self.stats.add(dedup_hits=1)
                 return
             os.makedirs(os.path.dirname(path), exist_ok=True)
             tmp = path + ".tmp"
             with open(tmp, "wb") as f:
                 f.write(data)
             os.replace(tmp, path)  # atomic commit — immutability invariant
-            self.stats.puts += 1
-            self.stats.bytes_written += len(data)
+            self.stats.add(puts=1, bytes_written=len(data))
 
     def get(self, key: bytes) -> bytes:
         with open(self._path(key), "rb") as f:
             data = f.read()
-        self.stats.gets += 1
-        self.stats.bytes_read += len(data)
+        self.stats.add(gets=1, bytes_read=len(data))
         return data
 
     def range_get(self, key: bytes, offset: int, length: int) -> bytes:
         with open(self._path(key), "rb") as f:
             f.seek(offset)
             data = f.read(length)
-        self.stats.range_gets += 1
-        self.stats.bytes_read += len(data)
+        self.stats.add(range_gets=1, bytes_read=len(data))
         return data
 
     def contains(self, key: bytes) -> bool:
@@ -171,9 +177,27 @@ class TieredStore(ObjectStore):
         self._hot: "collections.OrderedDict[bytes, bytes]" = collections.OrderedDict()
         self._hot_bytes = 0
         self._lock = threading.RLock()
-        self.stats = StoreStats()
+        self.stats = StoreStats()  # aggregate, whichever tier served
+        self.hot_stats = StoreStats()  # reads served by the DRAM tier only
         self.hot_hits = 0
         self.hot_misses = 0
+
+    def tier_snapshot(self) -> dict:
+        """Per-tier read/write split (the aggregate ``stats`` can't say
+        *where* a byte was served from).  ``hot`` counts reads the DRAM tier
+        absorbed; ``cold`` is the backing store's own counters (which include
+        promotion-triggered whole-object reads); ``total`` is the aggregate
+        view callers have always had."""
+        cold_stats = getattr(self.cold, "stats", None)
+        with self._lock:
+            hot = self.hot_stats.snapshot()
+            hot.update(hits=self.hot_hits, misses=self.hot_misses,
+                       resident_objects=len(self._hot),
+                       resident_bytes=self._hot_bytes,
+                       capacity_bytes=self.hot_capacity)
+        return {"hot": hot,
+                "cold": cold_stats.snapshot() if cold_stats is not None else {},
+                "total": self.stats.snapshot()}
 
     def _admit(self, key: bytes, data: bytes) -> None:
         if len(data) > self.hot_capacity:
@@ -189,47 +213,50 @@ class TieredStore(ObjectStore):
                 self._hot_bytes -= len(victim)
 
     def put(self, key: bytes, data: bytes) -> None:
-        dup = self.cold.contains(key)  # immutable content-addressed store
-        self.cold.put(key, data)
+        with self._lock:  # atomic contains+put: racing writers of the same
+            # new key must classify exactly one put and one dedup hit
+            dup = self.cold.contains(key)  # immutable content-addressed store
+            self.cold.put(key, data)
         if dup:
-            self.stats.dedup_hits += 1
+            self.stats.add(dedup_hits=1)
         else:
-            self.stats.puts += 1
-            self.stats.bytes_written += len(data)
+            self.stats.add(puts=1, bytes_written=len(data))
         if self.populate_on_write:
             self._admit(key, bytes(data))
 
     def get(self, key: bytes) -> bytes:
-        self.stats.gets += 1
+        self.stats.add(gets=1)
         with self._lock:
             hit = self._hot.get(key)
             if hit is not None:
                 self._hot.move_to_end(key)
                 self.hot_hits += 1
-                self.stats.bytes_read += len(hit)
+                self.hot_stats.add(gets=1, bytes_read=len(hit))
+                self.stats.add(bytes_read=len(hit))
                 return hit
-        self.hot_misses += 1
+            self.hot_misses += 1
         data = self.cold.get(key)
         self._admit(key, data)
-        self.stats.bytes_read += len(data)
+        self.stats.add(bytes_read=len(data))
         return data
 
     def range_get(self, key: bytes, offset: int, length: int) -> bytes:
-        self.stats.range_gets += 1
+        self.stats.add(range_gets=1)
         with self._lock:
             hit = self._hot.get(key)
             if hit is not None:
                 self._hot.move_to_end(key)
                 self.hot_hits += 1
-                self.stats.bytes_read += length
+                self.hot_stats.add(range_gets=1, bytes_read=length)
+                self.stats.add(bytes_read=length)
                 return hit[offset:offset + length]
-        self.hot_misses += 1
+            self.hot_misses += 1
         # Promote the *whole* object, not just the requested range: layerwise
         # retrieval issues L range reads against the same chunk, so serving
         # the miss from cold without admitting would defeat the hot tier for
         # exactly the access pattern it exists for.  But an object that can
         # never be admitted must not be amplified into L full-object reads.
-        self.stats.bytes_read += length
+        self.stats.add(bytes_read=length)
         if self.cold.object_size(key) > self.hot_capacity:
             return self.cold.range_get(key, offset, length)
         data = self.cold.get(key)

@@ -52,20 +52,30 @@ class TTFTResult:
 
 
 class ServingSimulator:
-    """TTFT for Llama 3.1 8B per the paper's measured constants."""
+    """TTFT for Llama 3.1 8B per the paper's measured constants.
 
-    def __init__(self, compute: Optional[PaperComputeModel] = None) -> None:
+    ``codec`` selects the KV wire codec (DESIGN.md §Codec): transfer terms
+    see the encoded byte counts while compute windows are untouched, so a
+    quantized codec shrinks every wire/storage stage by ``spec.wire_ratio``.
+    """
+
+    def __init__(self, compute: Optional[PaperComputeModel] = None,
+                 codec: str = "identity") -> None:
         self.compute = compute or PaperComputeModel()
+        self.codec = codec
 
     # -- spec helpers ---------------------------------------------------------
     def kv_spec(self, G: int) -> KVSpec:
         return KVSpec(num_layers=self.compute.num_layers, chunk_tokens=G,
-                      num_kv_heads=8, head_dim=128, dtype_bytes=2)
+                      num_kv_heads=8, head_dim=128, dtype_bytes=2,
+                      codec=self.codec)
 
     def flow_request(self, w: WorkloadRequest) -> FlowRequest:
+        spec = self.kv_spec(w.chunk_tokens)
         return FlowRequest(
             req_id=w.req_id,
-            bytes_per_layer=self.compute.bytes_per_layer(w.context, w.hit_rate),
+            bytes_per_layer=self.compute.bytes_per_layer(w.context, w.hit_rate)
+            * spec.wire_ratio,
             layer_compute_s=self.compute.layer_compute_s(w.context, w.hit_rate),
             num_layers=self.compute.num_layers)
 
@@ -77,7 +87,7 @@ class ServingSimulator:
         """S3Agg-LW / Local-DRAM-LW: per-layer pipeline + overlap."""
         spec = self.kv_spec(w.chunk_tokens)
         n_chunks = w.cached_tokens // w.chunk_tokens
-        layer_bytes = n_chunks * spec.per_layer_chunk_bytes
+        layer_bytes = n_chunks * spec.wire_per_layer_chunk_bytes
         L = spec.num_layers
         c = self.compute.layer_compute_s(w.context, w.hit_rate)
 
@@ -97,7 +107,7 @@ class ServingSimulator:
         """S3Batch-CW / Local-DRAM-CW: full prefix before compute (Fig. 7a)."""
         spec = self.kv_spec(w.chunk_tokens)
         n_chunks = w.cached_tokens // w.chunk_tokens
-        total = n_chunks * spec.chunk_bytes
+        total = n_chunks * spec.wire_chunk_bytes
         timing = profile.batch_get(n_chunks, total, rate_limit)
         c_total = self.compute.suffix_compute_s(w.context, w.hit_rate)
         ttft = timing.total_s + c_total

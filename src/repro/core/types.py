@@ -20,6 +20,21 @@ MiB = 1024**2
 KiB = 1024
 
 
+# Wire-codec identifiers (DESIGN.md §Codec).  The *arithmetic* of each codec
+# (bits per value, scale layout) lives here next to Eq. 1 so that KVSpec and
+# Descriptor can size wire payloads without importing `repro.codec`; the
+# actual byte transforms live in `src/repro/codec/`.
+CODEC_IDENTITY = "identity"
+CODEC_INT8 = "int8"
+CODEC_INT4 = "int4"
+
+# codec name -> (wire id, quantized bits per value; 0 = carry dtype_bytes raw)
+CODEC_WIRE_IDS: dict[str, int] = {CODEC_IDENTITY: 0, CODEC_INT8: 1,
+                                  CODEC_INT4: 2}
+_CODEC_BITS: dict[str, int] = {CODEC_IDENTITY: 0, CODEC_INT8: 8, CODEC_INT4: 4}
+CODEC_NAMES: dict[int, str] = {v: k for k, v in CODEC_WIRE_IDS.items()}
+
+
 class Delivery(enum.Enum):
     """Delivery order requested by a descriptor (paper Table 1, §3.4).
 
@@ -48,11 +63,21 @@ class KVSpec:
     num_kv_heads: int  # n_kv
     head_dim: int  # d
     dtype_bytes: int = 2  # p (bf16 default)
+    codec: str = CODEC_IDENTITY  # wire codec (DESIGN.md §Codec)
+
+    def __post_init__(self):
+        if self.codec not in CODEC_WIRE_IDS:
+            raise ValueError(f"unknown wire codec {self.codec!r}")
+
+    @property
+    def width(self) -> int:
+        """Payload width of one token row of one matrix (n_kv * d values)."""
+        return self.num_kv_heads * self.head_dim
 
     @property
     def per_layer_chunk_bytes(self) -> int:
-        """S = 2 * G * n_kv * d * p (Eq. 1)."""
-        return 2 * self.chunk_tokens * self.num_kv_heads * self.head_dim * self.dtype_bytes
+        """S = 2 * G * n_kv * d * p (Eq. 1) — the *decoded* per-layer size."""
+        return 2 * self.chunk_tokens * self.width * self.dtype_bytes
 
     @property
     def chunk_bytes(self) -> int:
@@ -61,15 +86,58 @@ class KVSpec:
     @property
     def bytes_per_token(self) -> int:
         """KV_token = 2 * L * n_kv * d * p (Eq. 1)."""
-        return 2 * self.num_layers * self.num_kv_heads * self.head_dim * self.dtype_bytes
+        return 2 * self.num_layers * self.width * self.dtype_bytes
 
     @property
     def bytes_per_token_per_layer(self) -> int:
-        return 2 * self.num_kv_heads * self.head_dim * self.dtype_bytes
+        return 2 * self.width * self.dtype_bytes
 
     def matched_payload_bytes(self, num_chunks: int) -> int:
-        """W = N * L * S (Eq. 2) — total bytes of a matched prefix."""
+        """W = N * L * S (Eq. 2) — total *decoded* bytes of a matched prefix."""
         return num_chunks * self.chunk_bytes
+
+    # -- wire sizing (DESIGN.md §Codec) --------------------------------------
+    # Quantized codecs store, per layer slice of a chunk, one fp16 scale per
+    # channel per matrix (K and V separately: 2 * width scales) followed by
+    # the two quantized [G, width] matrices.  Every chunk of a deployment
+    # still has identical per-layer wire size, which is what keeps the
+    # descriptor "arithmetic rather than manifest-heavy" (§3.2).
+    @property
+    def codec_id(self) -> int:
+        return CODEC_WIRE_IDS[self.codec]
+
+    @property
+    def scale_bytes_per_layer(self) -> int:
+        if self.codec == CODEC_IDENTITY:
+            return 0
+        return 2 * self.width * 2  # 2 matrices * width channels * fp16
+
+    @property
+    def wire_per_layer_chunk_bytes(self) -> int:
+        """S_wire — the on-the-wire (encoded) per-layer stride of a chunk."""
+        bits = _CODEC_BITS[self.codec]
+        if bits == 0:
+            return self.per_layer_chunk_bytes
+        per_matrix = (self.chunk_tokens * self.width * bits + 7) // 8
+        return self.scale_bytes_per_layer + 2 * per_matrix
+
+    @property
+    def wire_chunk_bytes(self) -> int:
+        return self.num_layers * self.wire_per_layer_chunk_bytes
+
+    @property
+    def wire_bytes_per_token_per_layer(self) -> float:
+        """Codec-adjusted analogue of Eq. 1's 2*n_kv*d*p byte density."""
+        return self.wire_per_layer_chunk_bytes / self.chunk_tokens
+
+    def matched_wire_bytes(self, num_chunks: int) -> int:
+        """W_wire = N * L * S_wire — bytes that actually cross the wire."""
+        return num_chunks * self.wire_chunk_bytes
+
+    @property
+    def wire_ratio(self) -> float:
+        """S_wire / S — < 1 under compression (the bytes-on-the-wire lever)."""
+        return self.wire_per_layer_chunk_bytes / self.per_layer_chunk_bytes
 
 
 @dataclasses.dataclass(frozen=True)

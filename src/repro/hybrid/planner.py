@@ -93,7 +93,9 @@ def split_ttft(m: int, context: int, spec: KVSpec, compute,
         # fetching anything would never complete, so any m > 0 is infeasible
         # and the planner degenerates to pure recompute.
         return math.inf
-    layer_bytes = m * spec.per_layer_chunk_bytes
+    # transfer terms see the *wire* (codec-encoded) bytes: compression
+    # shifts the compute-or-load crossover toward fetching
+    layer_bytes = m * spec.wire_per_layer_chunk_bytes
     startup, first, stage = profile.stage_times(m, layer_bytes, rate)
     if session_setup and profile is not LOCAL_DRAM:
         startup += RDMA_SESSION_SETUP_S
@@ -117,7 +119,7 @@ def _closed_form_argmin(T, n: int, context: int, spec: KVSpec, compute,
     if rate is not None and rate <= 0.0:
         return 0  # no bandwidth: every m > 0 is infeasible (split_ttft = inf)
     L = spec.num_layers
-    S = spec.per_layer_chunk_bytes
+    S = spec.wire_per_layer_chunk_bytes
     # Probe the shared stage-timing model at m=1 and m=2 rather than
     # re-deriving slopes from profile internals: every transfer term is
     # proportional to chunk count except the fixed control-plane cost, so
@@ -200,7 +202,7 @@ def plan_split(context: int, matched_chunks: int, spec: KVSpec, compute,
         fetch_chunks=best, total_chunks=n, chunk_tokens=spec.chunk_tokens,
         ttft_s=T(best), fetch_ttft_s=T(n), recompute_ttft_s=T(0),
         layer_compute_s=compute.layer_compute_s(context, hit_eff),
-        bytes_per_layer=best * spec.per_layer_chunk_bytes)
+        bytes_per_layer=best * spec.wire_per_layer_chunk_bytes)
 
 
 def validate_split(context: int, matched_chunks: int, spec: KVSpec, compute,

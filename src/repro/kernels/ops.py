@@ -14,11 +14,32 @@ import jax.numpy as jnp
 
 from .decode_attention import decode_attention as _decode
 from .flash_attention import flash_attention as _flash
+from .kv_dequant import kv_dequant as _dequant
+from .kv_dequant import kv_dequant_packed4 as _dequant_p4
 from .kv_gather import kv_gather as _gather
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+@functools.cache
+def dequant_supported() -> bool:
+    """Capability probe for the fused dequant kernels (run once, cached).
+
+    Mirrors the test-suite probe: actually execute a trivial call rather than
+    sniff versions.  The dequant kernels avoid the Pallas-TPU-only API
+    surface, so they normally pass even on CPU-only builds (interpret mode);
+    the serving client falls back to the numpy reference when they don't."""
+    try:
+        q = jnp.zeros((1, 2, 4), jnp.int8)
+        qp = jnp.zeros((1, 2, 2), jnp.uint8)
+        s = jnp.ones((1, 4), jnp.float16)
+        kv_dequant_op(q, s)
+        kv_dequant_packed4_op(qp, s)
+        return True
+    except Exception:  # pragma: no cover - environment dependent
+        return False
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -42,3 +63,18 @@ def decode_attention_op(q, k_cache, v_cache, lengths, *, block_s: int = 512,
 def kv_gather_op(pool, indices, *, interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
     return _gather(pool, indices, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def kv_dequant_op(q, scales, *, out_dtype=jnp.float32,
+                  interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dequant(q, scales, out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def kv_dequant_packed4_op(q_packed, scales, *, out_dtype=jnp.float32,
+                          interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dequant_p4(q_packed, scales, out_dtype=out_dtype,
+                       interpret=interpret)

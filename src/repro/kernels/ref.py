@@ -38,6 +38,22 @@ def ref_decode_attention(q, k_cache, v_cache, lengths) -> jnp.ndarray:
     return jnp.einsum("bhs,bshd->bhd", probs.astype(v.dtype), v.astype(q.dtype))
 
 
+def ref_kv_dequant(q, scales) -> jnp.ndarray:
+    """q: [N, R, W] int8; scales: [N, W] fp16 → [N, R, W] f32 — the fused
+    dequant oracle (see also the numpy twin `codec.ref.dequantize_per_channel`,
+    which the serving client uses as its host fallback)."""
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None, :]
+
+
+def ref_kv_dequant_packed4(q_packed, scales) -> jnp.ndarray:
+    """q_packed: [N, R, W/2] uint8 biased-nibble int4 pairs → [N, R, W] f32."""
+    lo = (q_packed & 0xF).astype(jnp.int32) - 8
+    hi = (q_packed >> 4).astype(jnp.int32) - 8
+    N, R, Wh = q_packed.shape
+    q = jnp.stack([lo, hi], axis=-1).reshape(N, R, 2 * Wh)
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None, :]
+
+
 def ref_kv_gather(pool, indices) -> jnp.ndarray:
     """pool: [P, G, W]; indices: [N] -> out [N, G, W].
 

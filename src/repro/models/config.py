@@ -99,11 +99,13 @@ class ModelConfig:
             return self.num_layers  # decoder self-attention layers
         return self.num_layers
 
-    def kv_spec(self, chunk_tokens: int, dtype_bytes: int = 2) -> KVSpec:
-        """ObjectCache chunk geometry for this deployment (Eq. 1)."""
+    def kv_spec(self, chunk_tokens: int, dtype_bytes: int = 2,
+                codec: str = "identity") -> KVSpec:
+        """ObjectCache chunk geometry for this deployment (Eq. 1); ``codec``
+        selects the KV wire codec (DESIGN.md §Codec)."""
         return KVSpec(num_layers=self.attn_layers, chunk_tokens=chunk_tokens,
                       num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
-                      dtype_bytes=dtype_bytes)
+                      dtype_bytes=dtype_bytes, codec=codec)
 
     # -- parameter counting (for roofline MODEL_FLOPS = 6·N·D) -------------
     def param_count(self) -> int:

@@ -40,7 +40,8 @@ from repro.models import Model
 from repro.models import dense, moe
 from repro.models import layers as nn
 
-from .kv_chunks import cache_to_chunks, layer_payload_to_kv
+from .kv_chunks import (cache_to_chunks, layer_payload_to_device_kv,
+                        layer_payload_to_kv)
 from .orchestrator import Orchestrator
 
 
@@ -203,10 +204,12 @@ class ServingEngine:
         act = jnp.dtype(cfg.compute_dtype)
         segs_k, segs_v, compute_times = [], [], []
         for l in range(cfg.num_layers):
-            # wait for the layer-ready notification (virtual transfer clock)
-            k_np, v_np = layer_payload_to_kv(res.payloads[l], n_chunks,
-                                             self.spec, act)
-            pk, pv = jnp.asarray(k_np)[None], jnp.asarray(v_np)[None]
+            # wait for the layer-ready notification (virtual transfer clock);
+            # quantized payloads dequantize on device (fused Pallas kernel
+            # when available), identity payloads are a bit view
+            k_d, v_d = layer_payload_to_device_kv(res.payloads[l], n_chunks,
+                                                  self.spec, act)
+            pk, pv = k_d[None], v_d[None]
             t0 = time.perf_counter()
             x, sk, sv = self._layer(self._layer_params(l), x, pk, pv, positions)
             x = jax.block_until_ready(x)

@@ -1,11 +1,18 @@
-"""Bridging model KV caches <-> KV_L2TD chunk objects.
+"""Bridging model KV caches <-> wire-encoded chunk objects.
 
 The model side speaks [L, 2, B, S, KV, dh] arrays; the storage side speaks
-immutable per-chunk byte objects (layer-major).  These converters are the only
-place the two layouts meet.
+immutable per-chunk byte objects (layer-major, encoded by ``spec.codec`` —
+DESIGN.md §Codec).  These converters are the only place the two layouts meet.
 
-bf16 note: numpy has no bfloat16, so device bf16 arrays cross the boundary as
-uint16 words (bit-identical); JAX views them back on the way in.
+bf16 note: numpy has no native bfloat16, so device bf16 arrays cross the
+identity boundary as uint16 words (bit-identical); JAX views them back on the
+way in.  Quantized codecs instead receive the *typed* arrays (ml_dtypes
+handles bf16 on the host) because quantization needs values, not bits.
+
+Decode paths: the identity codec is a bit view (never a value cast).  The
+quantized codecs dequantize through the fused Pallas kernel when the jax
+build supports it (`kernels.ops.dequant_supported`), else through the numpy
+reference (`codec.ref`).
 """
 from __future__ import annotations
 
@@ -13,53 +20,75 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import KVSpec, pack_chunk, unpack_layer_payload
+from repro.codec import get_codec
+from repro.core import KVSpec
+from repro.kernels import ops as kernel_ops
 from repro.models.config import ModelConfig
-
-
-def _to_wire(arr: np.ndarray) -> np.ndarray:
-    """Reinterpret to the unsigned wire word of the same width (bit-exact)."""
-    arr = np.asarray(arr)
-    wire = {1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize]
-    return arr.view(wire)
-
-
-def _from_wire(arr: np.ndarray, dtype) -> np.ndarray:
-    """Inverse of :func:`_to_wire` — a bit view, never a value cast."""
-    dtype = jnp.dtype(dtype)
-    assert arr.dtype.itemsize == dtype.itemsize, (arr.dtype, dtype)
-    return arr.view(dtype)
 
 
 def cache_to_chunks(cache, keys: list[bytes], spec: KVSpec, batch_row: int = 0,
                     start_token: int = 0) -> dict[bytes, bytes]:
-    """Pack ``len(keys)`` G-token chunks of one sequence's KV into objects.
+    """Pack ``len(keys)`` G-token chunks of one sequence's KV into encoded
+    objects (``spec.codec``).
 
     ``cache``: [L, 2, B, S, KV, dh] (prefix+suffix as produced by prefill).
     Chunk i covers tokens [start_token + i*G, start_token + (i+1)*G).
     """
     G = spec.chunk_tokens
     L = spec.num_layers
-    width = spec.num_kv_heads * spec.head_dim
-    arr = _to_wire(cache)  # [L, 2, B, S, KV, dh]
+    width = spec.width
+    codec = get_codec(spec.codec)
+    arr = np.asarray(cache)  # typed (ml_dtypes for bf16); codec picks its view
     out: dict[bytes, bytes] = {}
     for i, key in enumerate(keys):
         lo = start_token + i * G
         sl = arr[:, :, batch_row, lo:lo + G]  # [L, 2, G, KV, dh]
         k = np.ascontiguousarray(sl[:, 0].reshape(L, G, width))
         v = np.ascontiguousarray(sl[:, 1].reshape(L, G, width))
-        out[key] = pack_chunk(k, v, spec)
+        out[key] = codec.encode_chunk(k, v, spec)
     return out
 
 
 def layer_payload_to_kv(payload: bytes, num_chunks: int, spec: KVSpec, dtype
                         ) -> tuple[np.ndarray, np.ndarray]:
-    """One aggregated layer payload -> (k, v) [P, KV, dh] arrays (P = N*G)."""
-    k, v = unpack_layer_payload(payload, num_chunks, spec)
+    """One aggregated layer payload -> (k, v) [P, KV, dh] arrays (P = N*G).
+
+    Host-side decode: identity is a bit view; quantized codecs dequantize via
+    the numpy reference."""
+    codec = get_codec(spec.codec)
+    k, v = codec.decode_layer_payload(payload, num_chunks, spec,
+                                      np.dtype(jnp.dtype(dtype)))
     P = num_chunks * spec.chunk_tokens
     shape = (P, spec.num_kv_heads, spec.head_dim)
-    return (_from_wire(k, dtype).reshape(shape),
-            _from_wire(v, dtype).reshape(shape))
+    return k.reshape(shape), v.reshape(shape)
+
+
+def layer_payload_to_device_kv(payload: bytes, num_chunks: int, spec: KVSpec,
+                               dtype) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-side decode of one aggregated layer payload -> (k, v) jnp
+    [P, KV, dh].
+
+    For quantized codecs this uploads the *compressed* tensors (int8/packed
+    int4 + fp16 scales) and runs the fused Pallas dequant kernel, so the
+    host->device copy moves wire bytes, not decoded bytes.  Falls back to the
+    numpy reference when the kernel API is unavailable on this build."""
+    codec = get_codec(spec.codec)
+    G = spec.chunk_tokens
+    P = num_chunks * G
+    shape = (P, spec.num_kv_heads, spec.head_dim)
+    if codec.lossless or not kernel_ops.dequant_supported():
+        k, v = layer_payload_to_kv(payload, num_chunks, spec, dtype)
+        return jnp.asarray(k), jnp.asarray(v)
+    q, scales = codec.parse_layer_payload(payload, num_chunks, spec)
+    op = (kernel_ops.kv_dequant_packed4_op if codec.bits == 4
+          else kernel_ops.kv_dequant_op)
+    kq = np.ascontiguousarray(q[:, :G])
+    vq = np.ascontiguousarray(q[:, G:])
+    k = op(jnp.asarray(kq), jnp.asarray(np.ascontiguousarray(scales[:, 0, :])),
+           out_dtype=jnp.dtype(dtype))
+    v = op(jnp.asarray(vq), jnp.asarray(np.ascontiguousarray(scales[:, 1, :])),
+           out_dtype=jnp.dtype(dtype))
+    return k.reshape(shape), v.reshape(shape)
 
 
 def prefix_kv_from_payloads(payloads: list[bytes], num_chunks: int,

@@ -99,13 +99,15 @@ class Orchestrator:
         if match.num_chunks < self.min_hit_chunks:
             self.stats["misses" if not match.is_hit else "fallbacks"] += 1
             return TransferPlan(match, None, None)
-        W = self.spec.matched_payload_bytes(match.num_chunks)
+        # Mode selection and bandwidth demand follow the bytes that actually
+        # cross the wire — the codec-encoded size (DESIGN.md §Codec).
+        W = self.spec.matched_wire_bytes(match.num_chunks)
         delivery = select_mode(W, self.theta)
         rate = None
         if delivery is Delivery.LAYERWISE and (self.pool is not None
                                                or self.cap is not None):
             me = FlowRequest(req_id,
-                             match.num_chunks * self.spec.per_layer_chunk_bytes,
+                             match.num_chunks * self.spec.wire_per_layer_chunk_bytes,
                              layer_compute_s, self.spec.num_layers)
             if self.pool is not None:
                 # event-driven: join the shared pool and re-shape every

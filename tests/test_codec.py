@@ -1,0 +1,448 @@
+"""KV wire-codec subsystem tests (DESIGN.md §Codec).
+
+Covers: wire-size arithmetic, quantization reference primitives, chunk
+round-trips (identity bit-exact, quantized bounded), descriptor v2 codec
+carriage, server-side aggregation of *encoded* objects, the fused Pallas
+dequant kernels vs the numpy reference, byte accounting through the TTFT
+closed forms / hybrid planner / bandwidth pool, and single-request cluster
+conformance with codec-adjusted byte counts.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.codec import get_codec
+from repro.codec import ref as cref
+from repro.core import (CODEC_WIRE_IDS, Delivery, Descriptor, Gateway,
+                        InMemoryStore, KVSpec, StorageServer, chunk_keys,
+                        layer_range, make_descriptor)
+from repro.core.compute_model import PaperComputeModel
+from repro.core.scheduler import Policy, allocate
+from repro.core.simulator import ServingSimulator, WorkloadRequest
+from repro.core.transport import S3_RDMA_AGG
+from repro.hybrid.planner import plan_split, split_ttft
+from repro.hybrid.policy import HybridReplanner
+from repro.kernels import ops as kernel_ops
+
+GBPS = 1e9 / 8
+
+
+def _spec(codec, L=3, G=8, KV=2, dh=4, p=2):
+    return KVSpec(num_layers=L, chunk_tokens=G, num_kv_heads=KV, head_dim=dh,
+                  dtype_bytes=p, codec=codec)
+
+
+def _chunk_kv(spec, seed=0):
+    import ml_dtypes
+    rng = np.random.default_rng(seed)
+    shape = (spec.num_layers, spec.chunk_tokens, spec.width)
+    k = rng.standard_normal(shape).astype(ml_dtypes.bfloat16)
+    v = rng.standard_normal(shape).astype(ml_dtypes.bfloat16)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# wire-size arithmetic
+# ---------------------------------------------------------------------------
+class TestWireSizing:
+    def test_identity_wire_equals_raw(self):
+        spec = _spec("identity")
+        assert spec.wire_per_layer_chunk_bytes == spec.per_layer_chunk_bytes
+        assert spec.wire_chunk_bytes == spec.chunk_bytes
+        assert spec.wire_ratio == 1.0
+        assert spec.matched_wire_bytes(5) == spec.matched_payload_bytes(5)
+
+    @pytest.mark.parametrize("codec,bits", [("int8", 8), ("int4", 4)])
+    def test_quant_wire_arithmetic(self, codec, bits):
+        spec = _spec(codec, G=64, KV=8, dh=128)
+        W = spec.width
+        scale_bytes = 2 * W * 2
+        payload = 2 * (64 * W * bits // 8)
+        assert spec.scale_bytes_per_layer == scale_bytes
+        assert spec.wire_per_layer_chunk_bytes == scale_bytes + payload
+        assert spec.wire_ratio < 1.0
+
+    def test_int4_reaches_paper_reduction_at_g64(self):
+        """Acceptance bar: >= 3.5x wire-byte reduction at G=64."""
+        spec = _spec("int4", G=64, KV=8, dh=128)
+        assert spec.per_layer_chunk_bytes / spec.wire_per_layer_chunk_bytes \
+            >= 3.5
+
+    def test_unknown_codec_rejected(self):
+        with pytest.raises(ValueError, match="unknown wire codec"):
+            _spec("zstd")
+        with pytest.raises(ValueError, match="unknown wire codec"):
+            get_codec("zstd")
+
+    def test_every_registered_codec_has_wire_id(self):
+        for name in ("identity", "int8", "int4"):
+            assert get_codec(name).codec_id == CODEC_WIRE_IDS[name]
+
+    def test_layer_range_follows_wire_stride(self):
+        spec = _spec("int4")
+        S = spec.wire_per_layer_chunk_bytes
+        assert layer_range(2, spec) == (2 * S, 3 * S)
+
+
+# ---------------------------------------------------------------------------
+# reference primitives
+# ---------------------------------------------------------------------------
+class TestRefPrimitives:
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_quantize_error_bounded_by_half_scale(self, bits):
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((5, 16, 6)).astype(np.float32)
+        q, scales = cref.quantize_per_channel(x, bits)
+        y = cref.dequantize_per_channel(q, scales)
+        s = scales.astype(np.float32)[..., None, :]
+        # nearest-value rounding plus the fp16 scale rounding slack
+        assert np.all(np.abs(y - x) <= 0.51 * s + 1e-7)
+
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_quantize_range(self, bits):
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((4, 32, 8)).astype(np.float32) * 100
+        q, _ = cref.quantize_per_channel(x, bits)
+        qmax = cref.qmax_for_bits(bits)
+        assert q.min() >= -qmax and q.max() <= qmax
+
+    def test_huge_channel_scale_stays_finite(self):
+        """absmax beyond qmax*fp16_max must clamp the stored scale, not
+        overflow it to inf (which would dequantize to 0*inf = NaN)."""
+        x = np.zeros((1, 8, 4), np.float32)
+        x[0, :, 0] = 9e6  # > 127 * 65504
+        q, scales = cref.quantize_per_channel(x, 8)
+        assert np.isfinite(scales.astype(np.float32)).all()
+        y = cref.dequantize_per_channel(q, scales)
+        assert np.isfinite(y).all()
+        assert y[0, 0, 0] == pytest.approx(127 * 65504.0, rel=1e-3)
+
+    def test_zero_channel_is_exact(self):
+        x = np.zeros((2, 8, 4), np.float32)
+        q, scales = cref.quantize_per_channel(x, 8)
+        assert not q.any() and not scales.astype(np.float32).any()
+        np.testing.assert_array_equal(cref.dequantize_per_channel(q, scales), x)
+
+    def test_pack_unpack_int4_roundtrip(self):
+        rng = np.random.default_rng(2)
+        q = rng.integers(-8, 8, size=(3, 7, 10)).astype(np.int8)
+        np.testing.assert_array_equal(cref.unpack_int4(cref.pack_int4(q)), q)
+
+    def test_pack_int4_odd_width_rejected(self):
+        with pytest.raises(ValueError, match="even width"):
+            cref.pack_int4(np.zeros((2, 3), np.int8))
+
+
+# ---------------------------------------------------------------------------
+# chunk round-trips
+# ---------------------------------------------------------------------------
+class TestChunkRoundtrip:
+    def test_identity_bit_exact(self):
+        spec = _spec("identity")
+        k, v = _chunk_kv(spec)
+        codec = get_codec("identity")
+        buf = codec.encode_chunk(k, v, spec)
+        assert len(buf) == spec.wire_chunk_bytes
+        for l in range(spec.num_layers):
+            lo, hi = layer_range(l, spec)
+            kk, vv = codec.decode_layer_payload(buf[lo:hi], 1, spec, k.dtype)
+            np.testing.assert_array_equal(kk.view(np.uint16),
+                                          k[l].view(np.uint16))
+            np.testing.assert_array_equal(vv.view(np.uint16),
+                                          v[l].view(np.uint16))
+
+    def test_identity_accepts_wire_words(self):
+        """bf16 may cross the boundary pre-viewed as uint16 — same bytes."""
+        spec = _spec("identity")
+        k, v = _chunk_kv(spec)
+        codec = get_codec("identity")
+        assert codec.encode_chunk(k, v, spec) == codec.encode_chunk(
+            k.view(np.uint16), v.view(np.uint16), spec)
+
+    @pytest.mark.parametrize("codec_name", ["int8", "int4"])
+    def test_quant_roundtrip_bounded(self, codec_name):
+        spec = _spec(codec_name)
+        k, v = _chunk_kv(spec)
+        codec = get_codec(codec_name)
+        buf = codec.encode_chunk(k, v, spec)
+        assert len(buf) == spec.wire_chunk_bytes
+        qmax = cref.qmax_for_bits(codec.bits)
+        for l in range(spec.num_layers):
+            lo, hi = layer_range(l, spec)
+            kk, _ = codec.decode_layer_payload(buf[lo:hi], 1, spec, np.float32)
+            x = k[l].astype(np.float32)
+            bound = 0.51 * np.abs(x).max(axis=0) / qmax + 1e-7
+            assert np.all(np.abs(kk - x) <= bound[None, :])
+
+    @pytest.mark.parametrize("codec_name", ["int8", "int4"])
+    def test_quant_aggregated_payload_order(self, codec_name):
+        """An aggregated payload of N chunks decodes to the chunks' slices
+        concatenated in prefix order."""
+        spec = _spec(codec_name)
+        codec = get_codec(codec_name)
+        k0, v0 = _chunk_kv(spec, seed=0)
+        k1, v1 = _chunk_kv(spec, seed=1)
+        b0 = codec.encode_chunk(k0, v0, spec)
+        b1 = codec.encode_chunk(k1, v1, spec)
+        l = 1
+        lo, hi = layer_range(l, spec)
+        payload = b0[lo:hi] + b1[lo:hi]
+        kk, vv = codec.decode_layer_payload(payload, 2, spec, np.float32)
+        ka, _ = codec.decode_layer_payload(b0[lo:hi], 1, spec, np.float32)
+        kb, _ = codec.decode_layer_payload(b1[lo:hi], 1, spec, np.float32)
+        G = spec.chunk_tokens
+        np.testing.assert_array_equal(kk[:G], ka)
+        np.testing.assert_array_equal(kk[G:], kb)
+
+    def test_int4_odd_width_rejected(self):
+        spec = KVSpec(2, 4, 1, 3, 2, codec="int4")  # width 3
+        k = np.zeros((2, 4, 3), np.float32)
+        with pytest.raises(ValueError, match="even width"):
+            get_codec("int4").encode_chunk(k, k, spec)
+
+
+# ---------------------------------------------------------------------------
+# descriptor + aggregation over encoded objects
+# ---------------------------------------------------------------------------
+class TestDescriptorAndAggregation:
+    @pytest.mark.parametrize("codec_name", ["identity", "int8", "int4"])
+    def test_descriptor_carries_codec(self, codec_name):
+        spec = _spec(codec_name)
+        keys = chunk_keys(np.arange(32), spec.chunk_tokens)
+        d = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        assert d.codec_id == spec.codec_id
+        assert d.per_layer_chunk_bytes == spec.wire_per_layer_chunk_bytes
+        assert d.total_bytes == spec.matched_wire_bytes(len(keys))
+        d2 = Descriptor.from_wire(d.to_wire())
+        assert d2 == d
+
+    @pytest.mark.parametrize("codec_name", ["identity", "int8", "int4"])
+    def test_layerwise_aggregation_of_encoded_chunks(self, codec_name):
+        """The storage server range-reads the *encoded* stride and delivers
+        compressed layer payloads whose decode matches per-chunk decode."""
+        spec = _spec(codec_name)
+        codec = get_codec(codec_name)
+        store = InMemoryStore()
+        toks = np.arange(4 * spec.chunk_tokens)
+        keys = chunk_keys(toks, spec.chunk_tokens)
+        chunks = {}
+        for i, key in enumerate(keys):
+            k, v = _chunk_kv(spec, seed=i)
+            chunks[key] = codec.encode_chunk(k, v, spec)
+            store.put(key, chunks[key])
+        desc = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        res = StorageServer(store, S3_RDMA_AGG).execute_layerwise(desc)
+        S = spec.wire_per_layer_chunk_bytes
+        assert len(res.payloads) == spec.num_layers
+        for l, payload in enumerate(res.payloads):
+            assert len(payload) == len(keys) * S
+            want = b"".join(chunks[key][l * S:(l + 1) * S] for key in keys)
+            assert payload == want
+        assert all(e.nbytes == len(keys) * S for e in res.events)
+
+    @pytest.mark.parametrize("codec_name", ["identity", "int4"])
+    def test_chunkwise_equals_layerwise_payloads(self, codec_name):
+        spec = _spec(codec_name)
+        codec = get_codec(codec_name)
+        store = InMemoryStore()
+        keys = chunk_keys(np.arange(3 * spec.chunk_tokens), spec.chunk_tokens)
+        for i, key in enumerate(keys):
+            k, v = _chunk_kv(spec, seed=i)
+            store.put(key, codec.encode_chunk(k, v, spec))
+        lw = StorageServer(store, S3_RDMA_AGG).execute_layerwise(
+            make_descriptor(keys, spec, Delivery.LAYERWISE))
+        cw = StorageServer(store, S3_RDMA_AGG).execute_chunkwise(
+            make_descriptor(keys, spec, Delivery.CHUNKWISE))
+        assert lw.payloads == cw.payloads
+
+    @pytest.mark.parametrize("codec_name", ["identity", "int4"])
+    def test_gateway_objectcache_path(self, codec_name):
+        spec = _spec(codec_name)
+        codec = get_codec(codec_name)
+        store = InMemoryStore()
+        keys = chunk_keys(np.arange(2 * spec.chunk_tokens), spec.chunk_tokens)
+        for i, key in enumerate(keys):
+            k, v = _chunk_kv(spec, seed=i)
+            store.put(key, codec.encode_chunk(k, v, spec))
+        gw = Gateway(store)
+        desc = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        res = gw.objectcache_get(desc.to_wire())
+        assert len(res.payloads) == spec.num_layers
+        assert all(len(p) == 2 * spec.wire_per_layer_chunk_bytes
+                   for p in res.payloads)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant kernels vs the numpy reference
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(not kernel_ops.dequant_supported(),
+                    reason="Pallas dequant kernels unavailable on this build")
+class TestDequantKernels:
+    @pytest.mark.parametrize("N,R,W", [(1, 8, 8), (3, 16, 8), (5, 4, 128)])
+    def test_int8_kernel_matches_ref(self, N, R, W):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(0)
+        q = rng.integers(-127, 128, size=(N, R, W)).astype(np.int8)
+        scales = (rng.random((N, W)) * 0.1 + 1e-3).astype(np.float16)
+        out = np.asarray(kernel_ops.kv_dequant_op(jnp.asarray(q),
+                                                  jnp.asarray(scales)))
+        want = cref.dequantize_per_channel(
+            q.transpose(0, 1, 2), scales)  # [N, R, W] * [N, W]
+        np.testing.assert_array_equal(out, want)
+
+    @pytest.mark.parametrize("N,R,W", [(1, 8, 8), (4, 8, 64)])
+    def test_packed4_kernel_matches_ref(self, N, R, W):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(1)
+        q = rng.integers(-7, 8, size=(N, R, W)).astype(np.int8)
+        packed = cref.pack_int4(q)
+        scales = (rng.random((N, W)) * 0.1 + 1e-3).astype(np.float16)
+        out = np.asarray(kernel_ops.kv_dequant_packed4_op(
+            jnp.asarray(packed), jnp.asarray(scales)))
+        want = cref.dequantize_per_channel(q, scales)
+        np.testing.assert_array_equal(out, want)
+
+    def test_out_dtype(self):
+        import jax.numpy as jnp
+        q = np.ones((1, 2, 4), np.int8)
+        s = np.full((1, 4), 0.5, np.float16)
+        out = kernel_ops.kv_dequant_op(jnp.asarray(q), jnp.asarray(s),
+                                       out_dtype=jnp.bfloat16)
+        assert out.dtype == jnp.bfloat16
+
+    def test_device_decode_matches_host_decode(self):
+        import jax.numpy as jnp
+        from repro.serving.kv_chunks import (layer_payload_to_device_kv,
+                                             layer_payload_to_kv)
+        for codec_name in ("int8", "int4"):
+            spec = _spec(codec_name)
+            codec = get_codec(codec_name)
+            k, v = _chunk_kv(spec, seed=3)
+            buf = codec.encode_chunk(k, v, spec)
+            lo, hi = layer_range(0, spec)
+            payload = buf[lo:hi]
+            kh, vh = layer_payload_to_kv(payload, 1, spec, jnp.float32)
+            kd, vd = layer_payload_to_device_kv(payload, 1, spec, jnp.float32)
+            np.testing.assert_array_equal(np.asarray(kd), kh)
+            np.testing.assert_array_equal(np.asarray(vd), vh)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: closed forms, scheduler demand, hybrid crossover
+# ---------------------------------------------------------------------------
+class TestByteAccounting:
+    def test_flow_request_demand_scales_with_wire_ratio(self):
+        w = WorkloadRequest("r", 16384, 0.875)
+        base = ServingSimulator(codec="identity").flow_request(w)
+        comp = ServingSimulator(codec="int4").flow_request(w)
+        spec = ServingSimulator(codec="int4").kv_spec(64)
+        assert comp.bytes_per_layer == pytest.approx(
+            base.bytes_per_layer * spec.wire_ratio)
+        assert comp.layer_compute_s == base.layer_compute_s
+
+    @pytest.mark.parametrize("codec_name", ["int8", "int4"])
+    def test_constrained_ttft_improves_under_compression(self, codec_name):
+        w = WorkloadRequest("r", 16384, 0.875)
+        rate = 2 * GBPS
+        base = ServingSimulator(codec="identity").ttft_layerwise(
+            w, rate_limit=rate).ttft_s
+        comp = ServingSimulator(codec=codec_name).ttft_layerwise(
+            w, rate_limit=rate).ttft_s
+        assert comp < base
+
+    def test_unconstrained_ttft_never_worse(self):
+        w = WorkloadRequest("r", 65536, 0.875)
+        base = ServingSimulator(codec="identity").ttft_layerwise(w).ttft_s
+        comp = ServingSimulator(codec="int4").ttft_layerwise(w).ttft_s
+        assert comp <= base + 1e-12
+
+    def test_hybrid_crossover_shifts_toward_fetch(self):
+        compute = PaperComputeModel()
+        n = int(16384 * 0.875) // 64
+        fetched = []
+        for codec_name in ("identity", "int8", "int4"):
+            spec = ServingSimulator(codec=codec_name).kv_spec(64)
+            split = plan_split(16384, n, spec, compute, S3_RDMA_AGG,
+                               rate=4 * GBPS)
+            fetched.append(split.fetch_chunks)
+        assert fetched[0] <= fetched[1] <= fetched[2]
+        assert fetched[0] < fetched[2]  # strictly interior shift at 4 Gbps
+
+    @pytest.mark.parametrize("codec_name", ["identity", "int4"])
+    def test_closed_form_matches_exhaustive_under_codec(self, codec_name):
+        compute = PaperComputeModel()
+        spec = ServingSimulator(codec=codec_name).kv_spec(64)
+        n = int(16384 * 0.875) // 64
+        for rate in (1 * GBPS, 8 * GBPS, None):
+            cf = plan_split(16384, n, spec, compute, S3_RDMA_AGG, rate,
+                            method="closed_form")
+            ex = plan_split(16384, n, spec, compute, S3_RDMA_AGG, rate,
+                            method="exhaustive")
+            assert cf.ttft_s == pytest.approx(ex.ttft_s, abs=1e-12)
+
+    def test_replanner_recovers_chunks_from_wire_stride(self):
+        """HybridReplanner divides demand by the *wire* stride; under a
+        quantized codec the recovered chunk count must still be exact."""
+        compute = PaperComputeModel()
+        spec = ServingSimulator(codec="int4").kv_spec(64)
+        rep = HybridReplanner(compute=compute, profile=S3_RDMA_AGG, spec=spec)
+        rep.register("r0", 16384)
+        n = int(16384 * 0.875) // 64
+        flow = ServingSimulator(codec="int4").flow_request(
+            WorkloadRequest("r0", 16384, 0.875))
+        reduced = rep(flow, 1 * GBPS)
+        assert reduced is not None
+        m = reduced.bytes_per_layer / spec.wire_per_layer_chunk_bytes
+        assert abs(m - round(m)) < 1e-6 and 0 < round(m) < n
+
+
+# ---------------------------------------------------------------------------
+# cluster-sim conformance with codec-adjusted byte counts
+# ---------------------------------------------------------------------------
+class TestClusterConformance:
+    @pytest.mark.parametrize("codec_name", ["int8", "int4"])
+    @pytest.mark.parametrize("context,hit", [(16384, 0.875), (65536, 0.5)])
+    def test_layerwise_unthrottled(self, codec_name, context, hit):
+        from repro.cluster import ClusterSim, TraceRequest
+        sim = ServingSimulator(codec=codec_name)
+        cs = ClusterSim(cap_bps=None, codec=codec_name)
+        rec = cs.run([TraceRequest("r0", 0.0, context, hit)]).records[0]
+        want = sim.ttft_layerwise(WorkloadRequest("r0", context, hit)).ttft_s
+        assert rec.ttft_s == pytest.approx(want, abs=1e-9)
+
+    @pytest.mark.parametrize("codec_name", ["int8", "int4"])
+    def test_layerwise_capped(self, codec_name):
+        from repro.cluster import ClusterSim, TraceRequest
+        sim = ServingSimulator(codec=codec_name)
+        w = WorkloadRequest("r0", 16384, 0.875)
+        cap = 10 * GBPS
+        rate = allocate([sim.flow_request(w)], cap, Policy.CAL_STALL_OPT,
+                        0.0)["r0"]
+        cs = ClusterSim(cap_bps=cap, policy=Policy.CAL_STALL_OPT,
+                        codec=codec_name)
+        rec = cs.run([TraceRequest("r0", 0.0, 16384, 0.875)]).records[0]
+        want = sim.ttft_layerwise(w, rate_limit=rate).ttft_s
+        assert rec.ttft_s == pytest.approx(want, abs=1e-9)
+
+    @pytest.mark.parametrize("codec_name", ["int8", "int4"])
+    def test_chunkwise(self, codec_name):
+        from repro.cluster import ClusterSim, TraceRequest
+        from repro.core.transport import S3_RDMA_BATCH
+        sim = ServingSimulator(codec=codec_name)
+        w = WorkloadRequest("r0", 16384, 0.875)
+        cs = ClusterSim(cap_bps=None, profile=S3_RDMA_BATCH, mode="chunkwise",
+                        codec=codec_name)
+        rec = cs.run([TraceRequest("r0", 0.0, 16384, 0.875)]).records[0]
+        assert rec.ttft_s == pytest.approx(sim.ttft_chunkwise(w).ttft_s,
+                                           abs=1e-9)
+
+    def test_compressed_flow_releases_pool_earlier(self):
+        """Same trace, same cap: the int4 flow moves 3.76x fewer bytes, so
+        its transfer must leave the shared pool sooner."""
+        from repro.cluster import ClusterSim, TraceRequest
+        cap = 10 * GBPS
+        trace = [TraceRequest("r0", 0.0, 16384, 0.875)]
+        t_raw = ClusterSim(cap_bps=cap, codec="identity").run(trace)
+        t_c = ClusterSim(cap_bps=cap, codec="int4").run(trace)
+        assert t_c.records[0].flow_done_s < t_raw.records[0].flow_done_s

@@ -235,6 +235,56 @@ class TestStores:
         assert snap["gets"] == 1 and snap["range_gets"] == 1
         assert snap["bytes_written"] == 4 and snap["bytes_read"] == 6
 
+    def test_stats_snapshot_is_locked_consistent_cut(self):
+        """snapshot() holds the same lock add() takes: concurrent readers can
+        never observe a byte count without its op count."""
+        import threading
+        from repro.core.object_store import StoreStats
+        s = StoreStats()
+        stop = threading.Event()
+        bad: list[dict] = []
+
+        def writer():
+            while not stop.is_set():
+                s.add(gets=1, bytes_read=4)
+
+        def reader():
+            for _ in range(2000):
+                snap = s.snapshot()
+                if snap["bytes_read"] != 4 * snap["gets"]:
+                    bad.append(snap)
+            stop.set()
+
+        threads = [threading.Thread(target=writer) for _ in range(2)]
+        threads.append(threading.Thread(target=reader))
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not bad, f"torn snapshots observed: {bad[:3]}"
+
+    def test_tiered_per_tier_snapshot(self):
+        """hot/cold split (not just the aggregate): the DRAM tier's absorbed
+        reads and the cold tier's own counters are reported separately."""
+        cold = InMemoryStore()
+        t = TieredStore(cold, hot_capacity_bytes=64, populate_on_write=False)
+        t.put(b"a" * 16, b"0123456789abcdef")
+        t.range_get(b"a" * 16, 0, 4)  # miss -> whole-object promote
+        t.range_get(b"a" * 16, 4, 4)  # hot
+        t.get(b"a" * 16)  # hot
+        snap = t.tier_snapshot()
+        assert snap["hot"]["hits"] == 2 and snap["hot"]["misses"] == 1
+        assert snap["hot"]["range_gets"] == 1 and snap["hot"]["gets"] == 1
+        assert snap["hot"]["bytes_read"] == 4 + 16
+        assert snap["hot"]["resident_objects"] == 1
+        assert snap["hot"]["resident_bytes"] == 16
+        # the miss was served by promoting the whole object from cold
+        assert snap["cold"]["gets"] == 1 and snap["cold"]["range_gets"] == 0
+        assert snap["cold"]["bytes_read"] == 16
+        # aggregate view unchanged by the split
+        assert snap["total"] == t.stats.snapshot()
+        assert snap["total"]["range_gets"] == 2 and snap["total"]["gets"] == 1
+
 
 # ---------------------------------------------------------------------------
 # server-side aggregation (Table A3)

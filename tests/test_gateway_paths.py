@@ -1,0 +1,92 @@
+"""Gateway S3-path matrix (paper §4.1, Fig. 9).
+
+Previously only exercised indirectly through the serving stack: every one of
+the five S3-compatible paths must return byte-identical data (the path
+changes *how* bytes move, never *what* bytes arrive), and the calibrated
+profiles must rank exactly as the paper measures them — every hop from S3TCP
+to S3RDMA-Agg strictly improves single-object latency.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Delivery, Gateway, InMemoryStore, KVSpec, chunk_keys,
+                        make_descriptor)
+from repro.core.gateway import S3Path
+from repro.core.transport import PROFILES
+
+# Fig. 9's ordering: each step removes a bottleneck (TCP streaming ->
+# gateway staging -> per-object metadata -> descriptor-side metadata).
+ORDERED = [S3Path.TCP, S3Path.RDMA_BUFFER, S3Path.RDMA_DIRECT,
+           S3Path.RDMA_BATCH, S3Path.RDMA_AGG]
+SIZES = [4 * 1024, 256 * 1024, 4 * 1024 * 1024]
+
+
+def _gateway_with(data: dict[bytes, bytes]) -> Gateway:
+    store = InMemoryStore()
+    for k, v in data.items():
+        store.put(k, v)
+    return Gateway(store)
+
+
+class TestPathMatrix:
+    @pytest.mark.parametrize("size", SIZES)
+    def test_all_paths_return_identical_bytes(self, size):
+        rng = np.random.default_rng(size)
+        blob = rng.bytes(size)
+        gw = _gateway_with({b"k" * 16: blob})
+        results = {path: gw.get(b"k" * 16, path=path) for path in ORDERED}
+        for path, res in results.items():
+            assert res.data == blob, f"{path} corrupted payload"
+
+    @pytest.mark.parametrize("size", SIZES)
+    def test_single_get_timing_strictly_improves(self, size):
+        gw = _gateway_with({b"k" * 16: b"\x5a" * size})
+        totals = [gw.get(b"k" * 16, path=p).timing.total_s for p in ORDERED]
+        for prev, cur, p_prev, p_cur in zip(totals, totals[1:],
+                                            ORDERED, ORDERED[1:]):
+            assert cur < prev, (
+                f"{p_cur.value} ({cur:.6f}s) not faster than "
+                f"{p_prev.value} ({prev:.6f}s) at {size}B")
+
+    def test_range_get_identical_across_paths(self):
+        rng = np.random.default_rng(7)
+        blob = rng.bytes(64 * 1024)
+        gw = _gateway_with({b"r" * 16: blob})
+        want = blob[1000:9000]
+        for path in ORDERED:
+            assert gw.range_get(b"r" * 16, 1000, 8000, path=path).data == want
+
+    def test_batch_get_matches_single_gets(self):
+        rng = np.random.default_rng(8)
+        objs = {bytes([i]) * 16: rng.bytes(32 * 1024) for i in range(4)}
+        gw = _gateway_with(objs)
+        keys = list(objs)
+        datas, timing = gw.batch_get(keys)
+        assert datas == [objs[k] for k in keys]
+        # one batched request beats four per-object requests on any path
+        singles = sum(gw.get(k, path=S3Path.RDMA_DIRECT).timing.total_s
+                      for k in keys)
+        assert timing.total_s < singles
+
+    def test_objectcache_get_equals_store_slices(self):
+        """The descriptor path (S3RDMA-Agg) returns exactly the stored
+        layer slices, re-ordered layer-major — same bytes as any other path
+        would deliver, just aggregated."""
+        spec = KVSpec(num_layers=4, chunk_tokens=8, num_kv_heads=2,
+                      head_dim=4, dtype_bytes=2)
+        rng = np.random.default_rng(9)
+        keys = chunk_keys(np.arange(3 * spec.chunk_tokens), spec.chunk_tokens)
+        objs = {k: rng.bytes(spec.chunk_bytes) for k in keys}
+        gw = _gateway_with(objs)
+        desc = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        res = gw.objectcache_get(desc.to_wire())
+        S = spec.per_layer_chunk_bytes
+        for l, payload in enumerate(res.payloads):
+            assert payload == b"".join(objs[k][l * S:(l + 1) * S]
+                                       for k in keys)
+
+    def test_profiles_cover_all_paths(self):
+        gw = _gateway_with({})
+        assert set(gw.profiles) == set(S3Path)
+        for path, prof in gw.profiles.items():
+            assert prof.name in PROFILES

@@ -15,11 +15,12 @@ G = 8  # chunk tokens
 
 
 def _mk_engine(arch="qwen3-0.6b", theta=0, cap=None, hedge=False, sigma=0.0,
-               min_hit_chunks=1):
+               min_hit_chunks=1, codec="identity"):
     cfg = get_smoke_config(arch)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    spec = cfg.kv_spec(G, dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize)
+    spec = cfg.kv_spec(G, dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize,
+                       codec=codec)
     store = InMemoryStore()
     index = RadixIndex(G)
     orch = Orchestrator(index, Gateway(store), spec, theta_bytes=theta,
@@ -114,6 +115,50 @@ class TestEndToEnd:
         r2 = engine.submit(prompt, "w")
         assert r2.hit
         np.testing.assert_allclose(r2.logits, r1.logits, rtol=1e-4, atol=1e-4)
+
+
+class TestWireCodecs:
+    """Quantized KV wire codecs through the real engine (DESIGN.md §Codec):
+    identity stays bit-exact (covered above — it IS the raw path); int8/int4
+    trade bounded logit error for fewer bytes in the object store."""
+
+    @pytest.mark.parametrize("codec,tol", [("int8", 0.02), ("int4", 0.35)])
+    def test_quantized_cache_hit_bounded_logit_error(self, codec, tol):
+        engine, store, _ = _mk_engine(codec=codec)
+        rng = np.random.default_rng(20)
+        prompt = rng.integers(0, 200, size=48)
+        r1 = engine.submit(prompt, "cold")
+        r2 = engine.submit(prompt, "warm")
+        assert r2.hit and r2.delivery is Delivery.LAYERWISE
+        assert float(np.abs(r2.logits - r1.logits).max()) < tol
+
+    def test_quantized_store_holds_wire_bytes(self):
+        raw_engine, raw_store, _ = _mk_engine(codec="identity")
+        q_engine, q_store, _ = _mk_engine(codec="int4")
+        rng = np.random.default_rng(21)
+        prompt = rng.integers(0, 200, size=48)
+        raw_engine.submit(prompt, "a")
+        q_engine.submit(prompt, "a")
+        spec = q_engine.spec
+        assert raw_store.stats.bytes_written \
+            == raw_engine.stats.commits * spec.chunk_bytes
+        assert q_store.stats.bytes_written \
+            == q_engine.stats.commits * spec.wire_chunk_bytes
+        assert q_store.stats.bytes_written < raw_store.stats.bytes_written
+
+    def test_quantized_chunkwise_matches_layerwise_decode(self):
+        lw, *_ = _mk_engine(theta=0, codec="int8")
+        cw, *_ = _mk_engine(theta=1 << 60, codec="int8")
+        rng = np.random.default_rng(22)
+        prompt = rng.integers(0, 200, size=40)
+        lw.submit(prompt, "w1"), cw.submit(prompt, "w1")
+        r_lw = lw.submit(prompt, "w2")
+        r_cw = cw.submit(prompt, "w2")
+        assert r_lw.delivery is Delivery.LAYERWISE
+        assert r_cw.delivery is Delivery.CHUNKWISE
+        # same encoded objects, same dequant values -> near-identical logits
+        np.testing.assert_allclose(r_lw.logits, r_cw.logits, rtol=1e-4,
+                                   atol=1e-4)
 
 
 class TestTTFTAccounting:
