@@ -3,7 +3,11 @@
 Sweeps codec x context length x bandwidth and reports, per point:
 
   * wire-byte reduction vs the raw KV_L2TD layout (int4 must reach >= 3.5x
-    at the paper's G=64 — asserted);
+    at the paper's G=64 — asserted), including the group-wise-scale and
+    mixed-bit variants;
+  * descriptor v3 size-table metadata overhead at 4K context vs the v2
+    arithmetic-stride property (the ROADMAP's "measure before paying"
+    question; < 1% of wire bytes — asserted);
   * layerwise TTFT vs the uncompressed baseline through the calibrated
     transport model (`ServingSimulator`, Eq. 3 closed forms);
   * the hybrid compute-or-load split at each rate — compression shifts the
@@ -12,7 +16,15 @@ Sweeps codec x context length x bandwidth and reports, per point:
   * end-to-end logit error through the real `ServingEngine` (qwen3-0.6b
     smoke model, bytes round-tripped through the object store): the identity
     codec must be bit-for-bit equal to the raw path, quantized codecs report
-    max |dlogit| vs the no-cache prefill.
+    max |dlogit| vs the no-cache prefill;
+  * the mixed-bit error/bytes frontier on an 8-layer calibration model:
+    per-layer logit-sensitivity probe -> greedy allocation under a 0.6x
+    uniform-int8 byte budget -> end-to-end logit error.  Asserted: the
+    calibrated map fits the budget and beats uniform int4's error by >= 2x.
+    (Reaching uniform int8's *error* with any 4-bit layer is impossible —
+    per-layer errors compose near-max-like and every layer's int4 error
+    exceeds the whole-model int8 error; the measured gap is recorded, see
+    DESIGN.md §Codec for the verdict.)
 
 Run standalone:  PYTHONPATH=src python benchmarks/bench_codec.py [--smoke]
 """
@@ -34,10 +46,15 @@ except ImportError:  # pragma: no cover - script mode
 
 GBPS = 1e9 / 8
 CODECS = ("identity", "int8", "int4")
+# the new-generation codecs at the paper geometry (W=1024: default g128)
+MIXED32 = "mixed/" + "8" * 8 + "4" * 24 + "/g128"
+EXTRA_CODECS = ("gw8", "gw4", MIXED32)
 G = 64  # the paper's default chunk granularity
 CONTEXTS = ((4096, 0.875), (16384, 0.875), (65536, 0.5))
 RATES_GBPS = (1.0, 4.0, 16.0, 100.0)
 INT4_MIN_REDUCTION = 3.5
+MIXED_BUDGET_RATIO = 0.6  # mixed-bit chunk budget vs uniform int8
+DESC_OVERHEAD_MAX_PCT = 1.0  # v3 size-table metadata vs wire bytes at 4K
 
 
 def _spec(codec: str) -> KVSpec:
@@ -47,16 +64,62 @@ def _spec(codec: str) -> KVSpec:
 def run_wire_bytes() -> list[str]:
     rows = []
     base = _spec("identity")
-    for codec in CODECS:
+    for codec in CODECS + EXTRA_CODECS:
         spec = _spec(codec)
         reduction = base.wire_chunk_bytes / spec.wire_chunk_bytes
+        if spec.is_variable_rate:
+            sizes = sorted({spec.wire_layer_bytes(l)
+                            for l in range(spec.num_layers)})
+            stride = "table:" + "/".join(str(s) for s in sizes)
+        else:
+            stride = str(spec.wire_per_layer_chunk_bytes)
         rows.append(row(
-            f"codec/wire_bytes/{codec}", 0.0,
-            f"S_wire={spec.wire_per_layer_chunk_bytes};"
+            f"codec/wire_bytes/{codec.split('/')[0]}", 0.0,
+            f"S_wire={stride};"
             f"reduction_x={reduction:.2f};wire_ratio={spec.wire_ratio:.4f}"))
         if codec == "int4" and reduction < INT4_MIN_REDUCTION:
             raise AssertionError(
                 f"int4 wire reduction {reduction:.2f}x < {INT4_MIN_REDUCTION}x")
+    # group-wise scales must strictly cut the scale overhead at equal bits
+    for bits in (8, 4):
+        assert _spec(f"gw{bits}").wire_chunk_bytes \
+            < _spec(f"int{bits}").wire_chunk_bytes
+    return rows
+
+
+def run_descriptor_overhead(smoke: bool = False) -> list[str]:
+    """Answer the ROADMAP question with numbers: what does the v3 size table
+    cost over the v2 arithmetic stride, relative to the wire bytes it
+    describes, at the paper's 4K-context point (the context most sensitive
+    to fixed overheads)?"""
+    del smoke  # cheap enough to always run in full
+    from repro.core import Delivery, descriptor_overhead_bytes, make_descriptor
+    from repro.core.hashing import chunk_keys as make_keys
+    import numpy as np
+
+    rows = []
+    ctx, hit = 4096, 0.875
+    n = int(ctx * hit) // G
+    keys = make_keys(np.arange(n * G), G)
+    for codec in ("identity", "int4", MIXED32):
+        spec = _spec(codec)
+        desc = make_descriptor(keys, spec, Delivery.LAYERWISE)
+        over = descriptor_overhead_bytes(desc)
+        wire = spec.matched_wire_bytes(n)
+        pct = 100.0 * over["v3_metadata"] / wire
+        pct_full = 100.0 * over["v3_full_table_metadata"] / wire
+        v2_meta = over.get("v2_metadata")
+        rows.append(row(
+            f"codec/descriptor_v3/{codec.split('/')[0]}", 0.0,
+            f"N={n};wire_MB={wire/2**20:.1f};"
+            f"v2_meta_B={v2_meta if v2_meta is not None else 'n/a'};"
+            f"v3_meta_B={over['v3_metadata']};"
+            f"v3_full_table_B={over['v3_full_table_metadata']};"
+            f"v3_pct={pct:.5f};v3_full_pct={pct_full:.5f}"))
+        if pct >= DESC_OVERHEAD_MAX_PCT or pct_full >= DESC_OVERHEAD_MAX_PCT:
+            raise AssertionError(
+                f"descriptor v3 overhead {pct:.4f}%/{pct_full:.4f}% >= "
+                f"{DESC_OVERHEAD_MAX_PCT}% of 4K wire bytes ({codec})")
     return rows
 
 
@@ -132,7 +195,9 @@ def run_engine_accuracy(smoke: bool = False) -> list[str]:
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     prompt = np.random.default_rng(0).integers(0, 200, size=48)
-    codecs = ("identity", "int4") if smoke else CODECS
+    # the smoke model is 2 layers wide 32: explicit /g16 groups, 2-digit map
+    full = CODECS + ("gw8/g16", "gw4/g16", "mixed/84/g16")
+    codecs = ("identity", "int4", "mixed/84/g16") if smoke else full
 
     rows = []
     for codec in codecs:
@@ -150,17 +215,135 @@ def run_engine_accuracy(smoke: bool = False) -> list[str]:
         if codec == "identity" and not bitexact:
             raise AssertionError("identity codec not bit-exact vs raw path")
         rows.append(row(
-            f"codec/engine/{codec}", wall * 1e6,
+            f"codec/engine/{codec.split('/')[0]}", wall * 1e6,
             f"max_dlogit={dlogit:.5f};bitexact={bitexact};"
             f"wire_bytes={store.stats.snapshot()['bytes_written']}"))
     return rows
 
 
+def run_mixedbit_frontier(smoke: bool = False) -> list[str]:
+    """The per-layer bit-allocation frontier, end-to-end real (DESIGN.md
+    §Codec): probe each layer's logit sensitivity on an 8-layer calibration
+    model, greedily allocate bits under a 0.6x uniform-int8 wire budget
+    (`codec/allocate.py`), then serve through the real engine and compare
+    logit error against the uniform codecs.
+
+    Asserted: (1) the calibrated map fits the byte budget; (2) its logit
+    error beats uniform int4 by >= 2x (measured ~4x); (3) the 8-bit layers
+    form a depth prefix (the early-layers-are-sensitive premise).  The
+    mixed-vs-int8 error gap is *recorded*, not asserted <= 1: with every
+    layer's int4 error above the whole-model int8 error, no lossy bit map
+    can reach int8 error (see module docstring)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.codec import calibrate_mixed_codec
+    from repro.codec import ref as cref
+    from repro.core import Gateway, InMemoryStore, RadixIndex
+    from repro.models import build_model
+    from repro.models.config import ModelConfig
+    from repro.serving import Orchestrator, ServingEngine
+
+    cfg = ModelConfig(
+        name="qwen3-0.6b-cal8", family="dense", num_layers=8, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        qk_norm=True, mlp_kind="swiglu", param_dtype="float32",
+        compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(0, 200, size=48)
+    g, P = 8, 40  # 5 reused chunks of the 48-token prompt
+    L, W = cfg.num_layers, cfg.num_kv_heads * cfg.head_dim
+    group = 32  # one fp16 scale per 32-channel group (= full smoke width)
+    p_bytes = jnp.dtype(cfg.compute_dtype).itemsize
+
+    # calibration KV: the model's own prefix cache
+    batch = {"tokens": jnp.asarray(prompt)[None, :]}
+    lg_full, cache = jax.jit(lambda pr, b: model.prefill(pr, b))(params, batch)
+    lg_full = np.asarray(lg_full[0], np.float32)
+    cache = np.asarray(cache)  # [L, 2, 1, S, KV, dh]
+    kcal = cache[:, 0, 0, :P].reshape(L, P, W)
+    vcal = cache[:, 1, 0, :P].reshape(L, P, W)
+
+    rows = []
+    if smoke:
+        # skip the probe: fixed geometrically-decaying weights stand in for
+        # the measured sensitivity profile (recorded full runs confirm it)
+        weights = [2.0 ** -l for l in range(L)]
+    else:
+        # per-layer logit-sensitivity probe: quantize ONE layer's prefix KV
+        # at 4 bits, leave the rest exact, measure max |dlogit|
+        prefill_prefix = jax.jit(
+            lambda pr, b, pk, n: model.prefill(pr, b, pk, n),
+            static_argnames=("n",))
+        suffix = {"tokens": jnp.asarray(prompt[P:])[None, :]}
+        weights = []
+        for l in range(L):
+            pref = cache[:, :, :, :P].copy()
+            for m in (0, 1):
+                x = pref[l, m, 0].reshape(P, W)
+                q, s = cref.quantize_grouped(x, 4, group)
+                pref[l, m, 0] = cref.dequantize_grouped(q, s, group).reshape(
+                    P, cfg.num_kv_heads, cfg.head_dim)
+            lg, _ = prefill_prefix(params, suffix, jnp.asarray(pref), P)
+            w = float(np.abs(np.asarray(lg[0], np.float32) - lg_full).max())
+            weights.append(w)
+            rows.append(row(f"codec/frontier/sensitivity/L{l}", 0.0,
+                            f"int4_dlogit={w:.5f}"))
+
+    int8_chunk = cfg.kv_spec(g, dtype_bytes=p_bytes,
+                             codec="int8").wire_chunk_bytes
+    mixed = calibrate_mixed_codec(
+        kcal, vcal, chunk_tokens=g, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, budget_bytes_per_chunk=MIXED_BUDGET_RATIO
+        * int8_chunk, group=group, weights=weights, dtype_bytes=p_bytes)
+    bit_map = [int(d) for d in mixed.split("/")[1]]
+    first4 = next((i for i, b in enumerate(bit_map) if b == 4), L)
+    if not all(b == 4 for b in bit_map[first4:]):
+        raise AssertionError(f"8-bit layers are not a depth prefix: {mixed}")
+
+    errs, ratios = {}, {}
+    contenders = ("int8", "int4", mixed) if smoke \
+        else ("int8", "int4", f"gw4/g{group}", mixed)
+    for codec in contenders:
+        spec = cfg.kv_spec(g, dtype_bytes=p_bytes, codec=codec)
+        orch = Orchestrator(RadixIndex(g), Gateway(InMemoryStore()), spec,
+                            theta_bytes=0)
+        engine = ServingEngine(model, params, orch)
+        cold = engine.submit(prompt, "cold")
+        warm = engine.submit(prompt, "warm")
+        assert warm.hit
+        errs[codec] = float(np.abs(warm.logits - cold.logits).max())
+        ratios[codec] = spec.wire_chunk_bytes / int8_chunk
+        short = "mixed" if codec == mixed else codec.split("/")[0]
+        rows.append(row(
+            f"codec/frontier/{short}", 0.0,
+            f"max_dlogit={errs[codec]:.5f};bytes_vs_int8={ratios[codec]:.3f};"
+            f"codec={codec}"))
+    if ratios[mixed] > MIXED_BUDGET_RATIO + 1e-9:
+        raise AssertionError(
+            f"mixed map {mixed} uses {ratios[mixed]:.3f}x int8 bytes "
+            f"> {MIXED_BUDGET_RATIO}")
+    if errs[mixed] > 0.5 * errs["int4"]:
+        raise AssertionError(
+            f"mixed error {errs[mixed]:.5f} not >=2x better than uniform "
+            f"int4 {errs['int4']:.5f}")
+    rows.append(row(
+        "codec/frontier/verdict", 0.0,
+        f"map={mixed};bytes_vs_int8={ratios[mixed]:.3f};"
+        f"err_vs_int4={errs[mixed]/errs['int4']:.3f};"
+        f"err_vs_int8={errs[mixed]/errs['int8']:.2f}"))
+    return rows
+
+
 def run(smoke: bool = False) -> list[str]:
     rows = run_wire_bytes()
+    rows += run_descriptor_overhead(smoke)
     rows += run_ttft_sweep(smoke)
     rows += run_hybrid_shift(smoke)
     rows += run_engine_accuracy(smoke)
+    rows += run_mixedbit_frontier(smoke)
     return rows
 
 

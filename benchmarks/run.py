@@ -64,8 +64,11 @@ def _select(argv: list[str]) -> list:
     picked = []
     for name in only:
         if name not in by_name:
+            # fail fast, before any selected module runs: a typo must not
+            # cost a partial benchmark sweep
+            known = ", ".join(_short_name(m) for m in MODULES)
             raise SystemExit(
-                f"unknown benchmark {name!r}; run with --list to see names")
+                f"unknown benchmark {name!r}; known benchmarks: {known}")
         picked.append(by_name[name])
     return picked
 

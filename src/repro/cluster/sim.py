@@ -10,29 +10,32 @@ stream layers, recompute (hybrid re-planning at the offered rate), and leave
 
 Fluid transfer model (exact vs the Eq. 3 closed forms at constant rate):
 
-    pre      = startup(+session setup) + io + asm        (rate-independent)
-    m_stage  = max(io, asm)                              (cadence floor)
-    the wire byte-clock integrates `profile.effective_wire_rate(alloc)`
-    starting at ``admit + pre``; layer l's crossing w_l is when (l+1)*s
-    bytes landed;
-    ready_l  = max(w_l, ready_{l-1} + m_stage)
+    avail_l  = assembled-availability of layer l's payload — the storage
+               read/assemble recurrence of `TransportProfile.layer_pipeline`
+               rooted at admit (+session setup); rate-independent, so it is
+               precomputed per flow at admission.  Per-layer payload bytes
+               come from the codec's size table (`spec.wire_layer_bytes` —
+               constant-stride codecs are the degenerate table), so
+               variable-rate codecs integrate exactly.
+    the wire byte-clock integrates `profile.effective_wire_rate(alloc)`;
+    layer l's crossing is when its prefix-sum byte threshold lands, and the
+    clock may not serve layer l before ``avail_l`` (a payload cannot cross
+    the wire before it is assembled);
+    ready_l  = crossing time of layer l
     finish_l = max(ready_l, finish_{l-1}) + c            (Eq. 3 recurrence)
 
 One-layer prefetch gate (§3.5): the wire may serve layer l+1 no earlier
 than compute of layer l *starts* (S_l = max(ready_l, finish_{l-1})) — a
 flow cannot absorb bandwidth faster than its pipeline consumes, so
 allocating beyond the zero-stall rate r* is physically useless, exactly the
-premise of `allocate`'s caps.  The gate provably never changes TTFT at a
-constant rate (whichever of wire/compute/io/asm is the bottleneck, the
-gated cadence equals the ungated Eq. 3 cadence); it only changes *when the
-flow's transfer finishes* — i.e. how long it occupies the bandwidth pool,
-which is what a concurrency simulation is about.
-
-At a constant allocated rate the recurrences reduce to
-``ready_l = startup + first + l*stage`` with ``(startup, first, stage) =
-profile.stage_times(...)`` — the single-request conformance tests pin the
-event loop to `ServingSimulator.ttft_layerwise` / `ttft_chunkwise` and the
-hybrid planner's `split_ttft` to 1e-9.
+premise of `allocate`'s caps.  The gate never changes TTFT at a constant
+rate with constant per-layer sizes; with *variable* per-layer sizes it can
+genuinely reshape readiness, which is why the closed-form reference
+(`overlap.gated_layerwise_schedule`, used by `ServingSimulator` and the
+hybrid planner for variable-rate codecs) models the identical gated
+recurrence — the single-request conformance tests pin the event loop to
+`ttft_layerwise` / `ttft_chunkwise` / `split_ttft` at 1e-9 for every
+registered codec.
 
 Reallocation modes: ``epoch_s=None`` (default) re-allocates at every ARRIVE
 admission and FLOW_DONE departure (event mode); ``epoch_s=x`` restores the
@@ -65,15 +68,18 @@ class _ActiveFlow:
     record: RequestRecord
     fr: FlowRequest  # admitted (possibly re-planned) demand
     chunkwise: bool
-    layer_bytes: float
+    layer_bytes: float  # mean per-layer wire bytes (the pool's s_i)
     total_bytes: float
     num_layers: int
     c: float  # per-layer compute window
     c_total: float  # chunkwise total suffix compute
-    pre_s: float  # startup(+session) + io + asm
-    m_stage: float  # max(io, asm)
+    pre_s: float  # startup(+session) + io_0 + asm_0 (= avail[0] - admit)
+    # per-layer wire state (layerwise flows): cumulative byte thresholds and
+    # absolute assembled-availability times, from the codec's size table
+    thresholds: list[float] = dataclasses.field(default_factory=list)
+    avail: list[float] = dataclasses.field(default_factory=list)
     # fluid wire state
-    t_update: float
+    t_update: float = 0.0
     delivered: float = 0.0
     alloc_rate: Optional[float] = None
     phys_rate: float = 0.0
@@ -87,7 +93,7 @@ class _ActiveFlow:
     def next_threshold(self) -> float:
         if self.chunkwise:
             return self.total_bytes
-        return (self.next_layer + 1) * self.layer_bytes
+        return self.thresholds[self.next_layer]
 
 
 @dataclasses.dataclass
@@ -292,8 +298,9 @@ class ClusterSim:
     def _flow_request(self, tr: TraceRequest) -> FlowRequest:
         spec = self.kv_spec(tr.chunk_tokens)
         n_chunks = tr.cached_tokens // tr.chunk_tokens
-        # per-flow bandwidth demand is the codec-encoded (wire) byte count
-        layer_bytes = float(n_chunks * spec.wire_per_layer_chunk_bytes)
+        # per-flow bandwidth demand is the codec-encoded (wire) byte count;
+        # the mean per-layer stride keeps variable-rate codecs a scalar s_i
+        layer_bytes = n_chunks * spec.mean_wire_layer_bytes
         if self.mode == "chunkwise":
             # the pool waterfills on (s_i, c_i); spread the bulk transfer
             # evenly so zero_stall_rate stays meaningful
@@ -314,7 +321,9 @@ class ClusterSim:
             rate = alloc[tr.req_id]
         L = spec.num_layers
         layer_bytes = fr.bytes_per_layer
-        n_chunks = int(round(layer_bytes / spec.wire_per_layer_chunk_bytes))
+        # the scalar demand is the mean stride; recover the chunk count to
+        # rebuild the exact per-layer byte thresholds from the size table
+        n_chunks = int(round(layer_bytes * L / spec.wire_chunk_bytes))
         rec = next(r for r in reversed(self._records) if r.req_id == tr.req_id)
         rec.admit_s = now
         rec.num_layers = L
@@ -326,7 +335,7 @@ class ClusterSim:
             tr=tr, record=rec, fr=fr, chunkwise=(self.mode == "chunkwise"),
             layer_bytes=layer_bytes, total_bytes=layer_bytes * L,
             num_layers=L, c=fr.layer_compute_s,
-            c_total=fr.layer_compute_s * L, pre_s=0.0, m_stage=0.0,
+            c_total=fr.layer_compute_s * L, pre_s=0.0,
             t_update=now, alloc_rate=rate,
             phys_rate=self.profile.effective_wire_rate(rate))
         self._active[tr.req_id] = fl
@@ -335,7 +344,7 @@ class ClusterSim:
             # pure recompute (re-planned to m=0): no transfer, no startup —
             # the T(0) endpoint of the planner, L*c after admission.
             fl.wire_done = True
-            fl.pre_s = fl.m_stage = 0.0
+            fl.pre_s = 0.0
             self._queue.push(Event(now, EventKind.FLOW_DONE, tr.req_id))
             self._queue.push(Event(now + L * fl.c, EventKind.PREFILL_DONE,
                                    tr.req_id))
@@ -345,17 +354,22 @@ class ClusterSim:
                 n_chunks, int(fl.total_bytes))
             # batch_get semantics: control + storage io, no assemble stage
             fl.pre_s = startup + io
-            fl.m_stage = 0.0
             fl.c_total = self.compute.suffix_compute_s(tr.context, tr.hit_rate)
         else:
-            startup, io, asm = self.profile.pipeline_components(
-                n_chunks, int(layer_bytes))
-            if self.session_setup and self.profile is not LOCAL_DRAM:
-                startup += RDMA_SESSION_SETUP_S
-            fl.pre_s = startup + io + asm
-            fl.m_stage = max(io, asm)
-            # the wire stage starts after the control-plane + fill latency
-            fl.t_update = now + fl.pre_s
+            per_layer = [n_chunks * spec.wire_layer_bytes(l) for l in range(L)]
+            extra = RDMA_SESSION_SETUP_S \
+                if self.session_setup and self.profile is not LOCAL_DRAM else 0.0
+            _, avail_rel, _ = self.profile.layer_pipeline(
+                n_chunks, per_layer, None, startup_extra_s=extra)
+            fl.avail = [now + a for a in avail_rel]
+            thr, cum = [], 0.0
+            for b in per_layer:
+                cum += b
+                thr.append(cum)
+            fl.thresholds = thr
+            fl.pre_s = avail_rel[0]
+            # the wire stage starts once layer 0 is assembled
+            fl.t_update = fl.avail[0]
         self._schedule_next_wire(fl)
 
     # -- fluid wire integration ----------------------------------------------
@@ -394,9 +408,7 @@ class ClusterSim:
                                    EventKind.PREFILL_DONE, fid))
             return
         l = fl.next_layer
-        ready = t
-        if l > 0:
-            ready = max(ready, fl.ready_prev + fl.m_stage)
+        ready = t  # the clock was assembly-gated, so the crossing IS ready
         compute_start = max(ready, fl.finish_prev) if l > 0 else ready
         fl.ready_prev = ready
         fl.finish_prev = compute_start + fl.c
@@ -407,8 +419,10 @@ class ClusterSim:
             self._queue.push(Event(fl.finish_prev, EventKind.PREFILL_DONE,
                                    fid))
         else:
-            # one-layer prefetch: the wire serves layer l+1 no earlier than
-            # compute of layer l starts (absorption is consumption-gated)
-            fl.t_update = max(t, compute_start)
+            # one-layer prefetch (the wire serves layer l+1 no earlier than
+            # compute of layer l starts: absorption is consumption-gated)
+            # composed with the assembly gate (a payload cannot cross the
+            # wire before the storage pipeline assembled it)
+            fl.t_update = max(t, compute_start, fl.avail[l + 1])
             fl.next_layer = l + 1
             self._schedule_next_wire(fl)

@@ -2,9 +2,15 @@
 
 A codec maps one chunk's per-layer K/V slices to the layer-major bytes that
 live in the object store.  The layer-major *envelope* (KV_L2TD, §3.3) is
-shared by every codec — only the per-layer stride changes
-(``spec.wire_per_layer_chunk_bytes``) — so server-side aggregation stays pure
-range arithmetic whatever the codec.
+shared by every codec — only the per-layer strides change
+(``spec.wire_layer_bytes``; constant for the uniform codecs, a per-layer size
+table for mixed-bit) — so server-side aggregation stays pure range arithmetic
+whatever the codec.
+
+Codecs are parameterised by their spec string (core.types.parse_codec
+grammar): ``get_codec("gw4/g64")`` builds the group-wise int4 codec with
+64-channel scale groups on first use and memoises it.  Each codec module
+registers a *family builder* so the registry never hard-codes the set.
 
 Encode runs once, at commit time, against the model-dtype arrays; decode runs
 per aggregated layer payload on the client (numpy here; the serving engine
@@ -13,11 +19,13 @@ prefers the fused Pallas dequant kernel when the build supports it).
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
+from typing import Callable
 
 import numpy as np
 
 from repro.core.layout import pack_chunk, unpack_layer_payload, wire_dtype
-from repro.core.types import CODEC_IDENTITY, CODEC_WIRE_IDS, KVSpec
+from repro.core.types import (CODEC_IDENTITY, CodecFormat, KVSpec,
+                              codec_wire_id, parse_codec)
 
 
 def to_wire_words(arr: np.ndarray) -> np.ndarray:
@@ -32,15 +40,20 @@ class KVCodec(ABC):
     """One wire codec: name, wire id, and the two byte transforms."""
 
     name: str
-    bits: int  # quantized bits per value; 0 = raw model dtype
+    bits: int  # uniform quantized bits per value; 0 = raw model dtype
 
     @property
     def codec_id(self) -> int:
-        return CODEC_WIRE_IDS[self.name]
+        return codec_wire_id(self.name)
 
     @property
     def lossless(self) -> bool:
         return self.bits == 0
+
+    def layer_bits(self, spec: KVSpec, layer: int) -> int:
+        """Quantized bits of layer ``layer`` (uniform codecs ignore it)."""
+        del spec, layer
+        return self.bits
 
     @abstractmethod
     def encode_chunk(self, k: np.ndarray, v: np.ndarray, spec: KVSpec) -> bytes:
@@ -50,9 +63,12 @@ class KVCodec(ABC):
 
     @abstractmethod
     def decode_layer_payload(self, payload: bytes, num_chunks: int,
-                             spec: KVSpec, dtype) -> tuple[np.ndarray, np.ndarray]:
+                             spec: KVSpec, dtype, layer: int = 0
+                             ) -> tuple[np.ndarray, np.ndarray]:
         """One aggregated layer payload (N encoded layer slices in prefix
-        order) → (k, v) [N*G, width] arrays of ``dtype``."""
+        order) → (k, v) [N*G, width] arrays of ``dtype``.  ``layer`` selects
+        the per-layer parameters of a variable-rate codec; uniform codecs
+        ignore it."""
 
 
 class IdentityCodec(KVCodec):
@@ -64,7 +80,8 @@ class IdentityCodec(KVCodec):
     def encode_chunk(self, k, v, spec):
         return pack_chunk(to_wire_words(k), to_wire_words(v), spec)
 
-    def decode_layer_payload(self, payload, num_chunks, spec, dtype):
+    def decode_layer_payload(self, payload, num_chunks, spec, dtype, layer=0):
+        del layer
         k, v = unpack_layer_payload(payload, num_chunks, spec)
         dtype = np.dtype(dtype)
         assert wire_dtype(spec.dtype_bytes).itemsize == dtype.itemsize, \
@@ -73,6 +90,10 @@ class IdentityCodec(KVCodec):
 
 
 CODECS: dict[str, KVCodec] = {}
+# codec family (CODEC_WIRE_IDS key) -> builder(name, CodecFormat) -> KVCodec;
+# populated by each codec module at import time so parameterised spec
+# strings ("gw4/g64", "mixed/8844") construct on demand.
+FAMILY_BUILDERS: dict[str, Callable[[str, CodecFormat], KVCodec]] = {}
 
 
 def register(codec: KVCodec) -> KVCodec:
@@ -80,19 +101,41 @@ def register(codec: KVCodec) -> KVCodec:
     return codec
 
 
+def register_family(family: str,
+                    builder: Callable[[str, CodecFormat], KVCodec]) -> None:
+    FAMILY_BUILDERS[family] = builder
+
+
 def get_codec(name: str) -> KVCodec:
-    try:
-        return CODECS[name]
-    except KeyError:
+    codec = CODECS.get(name)
+    if codec is not None:
+        return codec
+    fmt = parse_codec(name)  # raises ValueError on garbage
+    builder = FAMILY_BUILDERS.get(fmt.family)
+    if builder is None:
         raise ValueError(f"unknown wire codec {name!r}; "
-                         f"known: {sorted(CODECS)}") from None
+                         f"known: {sorted(CODECS)}")
+    return register(builder(name, fmt))
 
 
 def codec_for_id(codec_id: int) -> KVCodec:
-    for codec in CODECS.values():
-        if codec.codec_id == codec_id:
-            return codec
-    raise ValueError(f"unknown wire codec id {codec_id}")
+    """Resolve a descriptor's one-byte wire id to the family's *canonical*
+    codec (e.g. id 3 -> ``gw8`` at the default group).
+
+    The id names only the decode family; the parameters (scale group, bit
+    map) are deployment state carried by ``KVSpec`` — decode paths must use
+    ``get_codec(spec.codec)``.  Families with no canonical parameterisation
+    (mixed-bit: the bit map is per-deployment) are refused rather than
+    guessed."""
+    from repro.core.types import CODEC_NAMES
+    name = CODEC_NAMES.get(codec_id)
+    if name is None:
+        raise ValueError(f"unknown wire codec id {codec_id}")
+    if name not in CODECS:
+        raise ValueError(
+            f"wire codec family {name!r} (id {codec_id}) has no canonical "
+            f"instance; resolve via get_codec(spec.codec)")
+    return CODECS[name]
 
 
 register(IdentityCodec())

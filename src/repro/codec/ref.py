@@ -47,6 +47,43 @@ def dequantize_per_channel(q: np.ndarray, scales: np.ndarray,
     return out.astype(dtype)
 
 
+def quantize_grouped(x: np.ndarray, bits: int, group: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Group-wise generalisation: one fp16 scale per ``group`` consecutive
+    channels (absmax over the token axis *and* the channels of the group) —
+    ``group=1`` is exactly :func:`quantize_per_channel`.
+
+    ``x`` [..., tokens, width] → (q int8 [..., tokens, width],
+    scales fp16 [..., width/group])."""
+    if group == 1:
+        return quantize_per_channel(x, bits)
+    qmax = qmax_for_bits(bits)
+    x = np.asarray(x, dtype=np.float32)
+    *lead, T, W = x.shape
+    if W % group:
+        raise ValueError(f"group {group} does not divide width {W}")
+    xg = x.reshape(*lead, T, W // group, group)
+    absmax = np.max(np.abs(xg), axis=(-3, -1))  # [..., W/group]
+    fp16_max = float(np.finfo(np.float16).max)
+    scales = np.minimum(absmax / qmax, fp16_max).astype(np.float16)
+    s = scales.astype(np.float32)
+    s_safe = np.where(s > 0.0, s, 1.0)
+    q = np.clip(np.rint(xg / s_safe[..., None, :, None]), -qmax, qmax)
+    return q.reshape(*lead, T, W).astype(np.int8), scales
+
+
+def dequantize_grouped(q: np.ndarray, scales: np.ndarray, group: int,
+                       dtype=np.float32) -> np.ndarray:
+    """Inverse of :func:`quantize_grouped` (up to rounding):
+    q [..., tokens, width] * scales [..., width/group] → ``dtype``."""
+    if group == 1:
+        return dequantize_per_channel(q, scales, dtype)
+    *lead, T, W = q.shape
+    qg = q.astype(np.float32).reshape(*lead, T, W // group, group)
+    out = qg * scales.astype(np.float32)[..., None, :, None]
+    return out.reshape(*lead, T, W).astype(dtype)
+
+
 def pack_int4(q: np.ndarray) -> np.ndarray:
     """Pack int4 values in [-8, 7] pairwise along the last axis (biased to
     unsigned nibbles: n = q + 8; even column → low nibble)."""

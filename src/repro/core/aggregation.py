@@ -55,8 +55,7 @@ class StorageServer:
     def execute_layerwise(self, desc: Descriptor,
                           rate_limit: Optional[float] = None,
                           start_s: float = 0.0) -> AggResult:
-        L, S, N = desc.num_layers, desc.per_layer_chunk_bytes, desc.num_chunks
-        layer_bytes = desc.layer_payload_bytes
+        L, N = desc.num_layers, desc.num_chunks
         storage = self.profile.storage
 
         payloads: list[bytes] = []
@@ -66,9 +65,16 @@ class StorageServer:
         t_asm_done = t_read_done
         t_wire_done = t_asm_done
         io_s = asm_s = net_s = 0.0
+        offset = 0
         for layer in range(L):
-            # Stage 1: N parallel range reads of [l*S, (l+1)*S).
-            parts = [self.store.range_get(key, layer * S, S) for key in desc.chunk_keys]
+            # Stage 1: N parallel range reads of the layer's table slot
+            # [offset, offset + S_l) — constant stride is the degenerate
+            # single-entry table, so this loop is codec-agnostic.
+            S_l = desc.chunk_layer_bytes(0, layer)
+            layer_bytes = N * S_l
+            parts = [self.store.range_get(key, offset, S_l)
+                     for key in desc.chunk_keys]
+            offset += S_l
             dt_read = storage.io_time(N, layer_bytes)
             t_read_done = t_read_done + dt_read
             # Stage 2: append slices in prefix order (server-side memcpy).
@@ -101,12 +107,15 @@ class StorageServer:
         timing = prof.batch_get(N, total, rate_limit)
         done = start_s + timing.total_s
         chunks = [self.store.get(key) for key in desc.chunk_keys]
-        # Reorganize to per-layer payloads for a uniform client interface.
-        S = desc.per_layer_chunk_bytes
-        payloads = [b"".join(c[l * S:(l + 1) * S] for c in chunks)
-                    for l in range(desc.num_layers)]
-        events = [LayerReady(l, done, desc.layer_payload_bytes)
-                  for l in range(desc.num_layers)]
+        # Reorganize to per-layer payloads for a uniform client interface;
+        # slice bounds come from the size table (constant stride degenerate).
+        payloads, events = [], []
+        lo = 0
+        for l in range(desc.num_layers):
+            hi = lo + desc.chunk_layer_bytes(0, l)
+            payloads.append(b"".join(c[lo:hi] for c in chunks))
+            events.append(LayerReady(l, done, desc.layer_payload_nbytes(l)))
+            lo = hi
         return AggResult(payloads, events, timing)
 
     def execute(self, desc: Descriptor, rate_limit: Optional[float] = None,

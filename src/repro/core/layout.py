@@ -11,9 +11,10 @@ Server-side aggregation never reshapes stored bytes — it only changes the
 matched chunks in prefix order.
 
 This module is the *identity* (raw) wire format.  Quantized wire codecs
-(DESIGN.md §Codec) reuse the same layer-major envelope with a smaller
-per-layer stride ``spec.wire_per_layer_chunk_bytes``; their transforms live
-in ``src/repro/codec/``.
+(DESIGN.md §Codec) reuse the same layer-major envelope with smaller
+per-layer strides ``spec.wire_layer_bytes(l)`` (constant for the uniform
+codecs, a per-layer size table for mixed-bit); their transforms live in
+``src/repro/codec/``.
 """
 from __future__ import annotations
 
@@ -58,11 +59,12 @@ def unpack_chunk(buf: bytes, spec: KVSpec) -> tuple[np.ndarray, np.ndarray]:
 
 
 def layer_range(layer: int, spec: KVSpec) -> tuple[int, int]:
-    """Byte range [l*S, (l+1)*S) of layer ``l`` inside any *stored* chunk
-    (§3.2).  S is the wire stride: under a quantized codec the stored object
-    is the encoded one, and the range arithmetic follows its smaller S."""
-    S = spec.wire_per_layer_chunk_bytes
-    return layer * S, (layer + 1) * S
+    """Byte range of layer ``l`` inside any *stored* chunk (§3.2).  Under a
+    constant-rate codec this is the arithmetic [l*S_wire, (l+1)*S_wire); a
+    variable-rate codec replaces the stride with the prefix sums of its
+    per-layer size table (Descriptor v3) — same lookup, general sizes."""
+    off = spec.wire_layer_offsets
+    return off[layer], off[layer + 1]
 
 
 def unpack_layer_payload(payload: bytes, num_chunks: int, spec: KVSpec

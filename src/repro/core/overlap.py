@@ -62,6 +62,52 @@ def required_bandwidth(bytes_per_layer: float, layer_compute_s: float) -> float:
     return bytes_per_layer / layer_compute_s
 
 
+def gated_layerwise_schedule(avail_s: Sequence[float], wire_s: Sequence[float],
+                             compute_s: Sequence[float]
+                             ) -> tuple[list[float], list[float]]:
+    """Layer-ready and compute-finish times of the §3.5 one-layer-prefetch
+    pipeline with *per-layer-varying* stage times (variable-rate codecs).
+
+    ``avail_s[l]`` is when layer l's payload is assembled and could start
+    crossing the wire (storage read + assemble recurrences, rate-independent);
+    ``wire_s[l]`` its wire transmit time at the allocated rate.  The wire is
+    serial and gated: it serves layer l no earlier than
+
+        max(ready_{l-1}, compute-start of layer l-1, avail_l)
+
+    — a flow cannot absorb bandwidth faster than its pipeline consumes
+    (`cluster.sim`'s premise).  Then
+
+        ready_l  = wire-start_l + wire_s[l]
+        finish_l = max(ready_l, finish_{l-1}) + compute_s[l]      (Eq. 3)
+
+    At constant per-layer times this reduces exactly to
+    `steady_pipeline_ttft` (the gate is TTFT-neutral for constant cadence);
+    with variable sizes the gate can genuinely reshape readiness, so the
+    closed forms and the event-driven cluster simulator both use THIS
+    schedule and cannot drift apart.
+    """
+    ready: list[float] = []
+    finish: list[float] = []
+    wire_free = 0.0
+    for l, (a, x, c) in enumerate(zip(avail_s, wire_s, compute_s)):
+        r = max(wire_free, a) + x
+        compute_start = max(r, finish[-1]) if l else r
+        ready.append(r)
+        finish.append(compute_start + c)
+        # next layer's wire start waits for this layer's compute to start
+        wire_free = compute_start
+    return ready, finish
+
+
+def gated_layerwise_ttft(avail_s: Sequence[float], wire_s: Sequence[float],
+                         compute_s: Sequence[float]) -> float:
+    """TTFT of :func:`gated_layerwise_schedule` (finish of the last layer)."""
+    if not compute_s:
+        return 0.0
+    return gated_layerwise_schedule(avail_s, wire_s, compute_s)[1][-1]
+
+
 def steady_pipeline_ttft(num_layers: int, first_s: float, stage_s: float,
                          layer_compute_s: float) -> float:
     """Closed form of Eq. 3 for a *steady* pipeline: layer l is ready at

@@ -20,7 +20,7 @@ import dataclasses
 from typing import Optional, Sequence
 
 from .compute_model import PaperComputeModel
-from .overlap import pipeline_ttft
+from .overlap import gated_layerwise_schedule, pipeline_ttft
 from .scheduler import Policy, allocate
 from .transport import (LOCAL_DRAM, RDMA_SESSION_SETUP_S, S3_RDMA_AGG,
                         S3_RDMA_BATCH, TransportProfile)
@@ -84,18 +84,34 @@ class ServingSimulator:
                        profile: TransportProfile = S3_RDMA_AGG,
                        rate_limit: Optional[float] = None,
                        session_setup: bool = True) -> TTFTResult:
-        """S3Agg-LW / Local-DRAM-LW: per-layer pipeline + overlap."""
+        """S3Agg-LW / Local-DRAM-LW: per-layer pipeline + overlap.
+
+        Constant-stride codecs use the Eq. 3 steady closed form; a
+        variable-rate codec (per-layer wire sizes, DESIGN.md §Codec) uses
+        the gated per-layer schedule — the same recurrence the cluster
+        simulator integrates, so the two agree at 1e-9 either way."""
         spec = self.kv_spec(w.chunk_tokens)
         n_chunks = w.cached_tokens // w.chunk_tokens
-        layer_bytes = n_chunks * spec.wire_per_layer_chunk_bytes
         L = spec.num_layers
         c = self.compute.layer_compute_s(w.context, w.hit_rate)
+        extra = RDMA_SESSION_SETUP_S \
+            if session_setup and profile is not LOCAL_DRAM else 0.0
 
+        if spec.is_variable_rate:
+            per_layer = [n_chunks * spec.wire_layer_bytes(l) for l in range(L)]
+            startup, avail, wire = profile.layer_pipeline(
+                n_chunks, per_layer, rate_limit, startup_extra_s=extra)
+            ready, finish = gated_layerwise_schedule(avail, wire, [c] * L)
+            stage = (ready[-1] - ready[0]) / (L - 1) if L > 1 else 0.0
+            return TTFTResult(w.req_id, finish[-1], startup, stage, c,
+                              stalled=any(r > f for r, f in
+                                          zip(ready[1:], finish)))
+
+        layer_bytes = n_chunks * spec.wire_per_layer_chunk_bytes
         # 3-stage pipeline per layer (storage read -> assemble -> wire).
         startup, first, stage = profile.stage_times(n_chunks, layer_bytes,
                                                     rate_limit)
-        if session_setup and profile is not LOCAL_DRAM:
-            startup += RDMA_SESSION_SETUP_S
+        startup += extra
         ready = [startup + first + l * stage for l in range(L)]
         compute = [c] * L
         ttft = pipeline_ttft(ready, compute)

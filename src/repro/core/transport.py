@@ -115,6 +115,34 @@ class TransportProfile:
         asm = self.storage.assemble_time(payload_bytes)
         return startup, io, asm
 
+    def layer_pipeline(self, n_objects: int, per_layer_bytes,
+                       rate_limit: Optional[float] = None,
+                       startup_extra_s: float = 0.0
+                       ) -> tuple[float, list[float], list[float]]:
+        """Per-layer generalisation of :meth:`stage_times` for payloads whose
+        bytes differ across layers (variable-rate codecs, DESIGN.md §Codec).
+
+        Returns ``(startup, avail, wire)``: ``avail[l]`` is the absolute time
+        (including ``startup``) at which layer l's payload has been range-read
+        and assembled — the storage-side 2-stage recurrence of
+        `aggregation.StorageServer.execute_layerwise`, rate-independent —
+        and ``wire[l]`` its wire transmit time at the allocated rate.  Feed
+        both to `overlap.gated_layerwise_schedule` for layer-ready times; at
+        constant per-layer bytes that composition reproduces
+        ``startup + first + l*stage`` exactly (up to fp associativity).
+        """
+        startup = (self.control_plane_s + self.per_object_s * n_objects
+                   + startup_extra_s)
+        t_read = t_asm = startup
+        avail: list[float] = []
+        wire: list[float] = []
+        for nbytes in per_layer_bytes:
+            t_read = t_read + self.storage.io_time(n_objects, nbytes)
+            t_asm = max(t_asm, t_read) + self.storage.assemble_time(nbytes)
+            avail.append(t_asm)
+            wire.append(self.wire_time(nbytes, rate_limit))
+        return startup, avail, wire
+
     def stage_times(self, n_objects: int, payload_bytes: int,
                     rate_limit: Optional[float] = None
                     ) -> tuple[float, float, float]:

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 from typing import Optional
 
 GiB = 1024**3
@@ -24,15 +25,97 @@ KiB = 1024
 # (bits per value, scale layout) lives here next to Eq. 1 so that KVSpec and
 # Descriptor can size wire payloads without importing `repro.codec`; the
 # actual byte transforms live in `src/repro/codec/`.
+#
+# Codec spec grammar (one string selects codec + parameters):
+#
+#   identity                      raw model dtype, bit-exact
+#   int8 | int4                   symmetric quant, per-channel fp16 scales
+#   gw8[/gN] | gw4[/gN]           group-wise scales: one fp16 scale per N
+#                                 consecutive channels (default N=128)
+#   mixed/<digits>[/gN]           per-layer bit map, one digit in {4, 8} per
+#                                 layer (layer 0 first); optional group-wise
+#                                 scales (default per-channel)
+#
+# e.g. "gw4/g64", "mixed/8844/g128".  The descriptor's one-byte codec id
+# names the *family* (decode algorithm); the parameters (group size, bit
+# map) are deployment state carried by KVSpec, exactly like (L, G, d).
 CODEC_IDENTITY = "identity"
 CODEC_INT8 = "int8"
 CODEC_INT4 = "int4"
+CODEC_GW8 = "gw8"
+CODEC_GW4 = "gw4"
+CODEC_MIXED = "mixed"
+DEFAULT_SCALE_GROUP = 128  # the ROADMAP's per-128-channel-group default
 
-# codec name -> (wire id, quantized bits per value; 0 = carry dtype_bytes raw)
+# codec family -> descriptor wire id
 CODEC_WIRE_IDS: dict[str, int] = {CODEC_IDENTITY: 0, CODEC_INT8: 1,
-                                  CODEC_INT4: 2}
-_CODEC_BITS: dict[str, int] = {CODEC_IDENTITY: 0, CODEC_INT8: 8, CODEC_INT4: 4}
+                                  CODEC_INT4: 2, CODEC_GW8: 3, CODEC_GW4: 4,
+                                  CODEC_MIXED: 5}
 CODEC_NAMES: dict[int, str] = {v: k for k, v in CODEC_WIRE_IDS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecFormat:
+    """Parsed codec spec: everything sizing needs, nothing codec-specific.
+
+    ``group`` counts *channels sharing one fp16 scale* (1 = per-channel, the
+    finest); ``bit_map`` is the per-layer bits of a mixed codec (None for
+    uniform codecs, whose every layer uses ``bits``).
+    """
+
+    family: str  # key of CODEC_WIRE_IDS
+    bits: int  # uniform quantized bits per value (0 = raw model dtype)
+    group: int = 1
+    bit_map: Optional[tuple[int, ...]] = None
+
+    def layer_bits(self, layer: int) -> int:
+        return self.bit_map[layer] if self.bit_map is not None else self.bits
+
+    @property
+    def is_variable_rate(self) -> bool:
+        """True when per-layer wire strides differ (descriptor needs v3)."""
+        return self.bit_map is not None and len(set(self.bit_map)) > 1
+
+
+@functools.lru_cache(maxsize=None)
+def parse_codec(codec: str) -> CodecFormat:
+    """Parse a codec spec string (grammar above); raises ValueError."""
+    parts = codec.split("/")
+    name, rest = parts[0], parts[1:]
+
+    def take_group(default: int) -> int:
+        if not rest:
+            return default
+        g = rest.pop(0)
+        if not (g.startswith("g") and g[1:].isdigit() and int(g[1:]) > 0):
+            raise ValueError(f"bad scale-group suffix {g!r} in codec {codec!r}")
+        return int(g[1:])
+
+    if name == CODEC_IDENTITY:
+        fmt = CodecFormat(CODEC_IDENTITY, 0)
+    elif name in (CODEC_INT8, CODEC_INT4):
+        fmt = CodecFormat(name, int(name[3:]))
+    elif name in (CODEC_GW8, CODEC_GW4):
+        fmt = CodecFormat(name, int(name[2:]), take_group(DEFAULT_SCALE_GROUP))
+    elif name == CODEC_MIXED:
+        if not rest:
+            raise ValueError(f"mixed codec needs a bit map: {codec!r}")
+        digits = rest.pop(0)
+        if not digits or any(d not in "48" for d in digits):
+            raise ValueError(
+                f"mixed bit map must be digits in {{4,8}}, got {digits!r}")
+        fmt = CodecFormat(CODEC_MIXED, 0, take_group(1),
+                          tuple(int(d) for d in digits))
+    else:
+        raise ValueError(f"unknown wire codec {codec!r}; "
+                         f"families: {sorted(CODEC_WIRE_IDS)}")
+    if rest:
+        raise ValueError(f"trailing codec spec parts {rest!r} in {codec!r}")
+    return fmt
+
+
+def codec_wire_id(codec: str) -> int:
+    return CODEC_WIRE_IDS[parse_codec(codec).family]
 
 
 class Delivery(enum.Enum):
@@ -66,8 +149,21 @@ class KVSpec:
     codec: str = CODEC_IDENTITY  # wire codec (DESIGN.md §Codec)
 
     def __post_init__(self):
-        if self.codec not in CODEC_WIRE_IDS:
-            raise ValueError(f"unknown wire codec {self.codec!r}")
+        fmt = parse_codec(self.codec)  # raises on an unknown/garbled spec
+        if fmt.family == CODEC_IDENTITY:
+            return
+        if self.width % fmt.group:
+            raise ValueError(
+                f"scale group {fmt.group} does not divide width {self.width} "
+                f"(codec {self.codec!r})")
+        if fmt.bit_map is not None and len(fmt.bit_map) != self.num_layers:
+            raise ValueError(
+                f"mixed bit map has {len(fmt.bit_map)} entries for "
+                f"{self.num_layers} layers (codec {self.codec!r})")
+        bits = set(fmt.bit_map) if fmt.bit_map is not None else {fmt.bits}
+        if 4 in bits and self.width % 2:
+            raise ValueError(f"4-bit packing needs an even width, "
+                             f"got {self.width} (codec {self.codec!r})")
 
     @property
     def width(self) -> int:
@@ -98,46 +194,90 @@ class KVSpec:
 
     # -- wire sizing (DESIGN.md §Codec) --------------------------------------
     # Quantized codecs store, per layer slice of a chunk, one fp16 scale per
-    # channel per matrix (K and V separately: 2 * width scales) followed by
-    # the two quantized [G, width] matrices.  Every chunk of a deployment
-    # still has identical per-layer wire size, which is what keeps the
-    # descriptor "arithmetic rather than manifest-heavy" (§3.2).
+    # channel *group* per matrix (K and V separately) followed by the two
+    # quantized [G, width] matrices.  Every chunk of a deployment has the
+    # same per-layer wire sizes, but a mixed-bit codec makes the sizes differ
+    # *across layers* — the descriptor's arithmetic stride then becomes a
+    # per-layer size table (Descriptor v3), of which the constant stride is
+    # the degenerate single-entry case.
+    @property
+    def codec_format(self) -> CodecFormat:
+        return parse_codec(self.codec)
+
     @property
     def codec_id(self) -> int:
-        return CODEC_WIRE_IDS[self.codec]
+        return CODEC_WIRE_IDS[self.codec_format.family]
+
+    @property
+    def scale_groups(self) -> int:
+        """fp16 scales per matrix per layer slice (width / channel group)."""
+        fmt = self.codec_format
+        return 0 if fmt.bits == 0 and fmt.bit_map is None \
+            else self.width // fmt.group
 
     @property
     def scale_bytes_per_layer(self) -> int:
-        if self.codec == CODEC_IDENTITY:
-            return 0
-        return 2 * self.width * 2  # 2 matrices * width channels * fp16
+        return 2 * self.scale_groups * 2  # 2 matrices * groups * fp16
 
-    @property
-    def wire_per_layer_chunk_bytes(self) -> int:
-        """S_wire — the on-the-wire (encoded) per-layer stride of a chunk."""
-        bits = _CODEC_BITS[self.codec]
+    def wire_layer_bytes(self, layer: int) -> int:
+        """Encoded bytes of layer ``layer``'s slice of any chunk (the entry
+        of the descriptor-v3 size table)."""
+        bits = self.codec_format.layer_bits(layer)
         if bits == 0:
             return self.per_layer_chunk_bytes
         per_matrix = (self.chunk_tokens * self.width * bits + 7) // 8
         return self.scale_bytes_per_layer + 2 * per_matrix
 
+    @functools.cached_property
+    def wire_layer_offsets(self) -> tuple[int, ...]:
+        """Prefix sums of the per-layer wire sizes: layer ``l`` of any stored
+        chunk occupies bytes [offsets[l], offsets[l+1])."""
+        off, total = [0], 0
+        for l in range(self.num_layers):
+            total += self.wire_layer_bytes(l)
+            off.append(total)
+        return tuple(off)
+
+    @property
+    def is_variable_rate(self) -> bool:
+        """True when per-layer wire strides differ (needs the v3 table)."""
+        return self.codec_format.is_variable_rate
+
+    @property
+    def wire_per_layer_chunk_bytes(self) -> int:
+        """S_wire — the constant per-layer encoded stride.  Only defined for
+        constant-rate codecs; variable-rate callers must use
+        :meth:`wire_layer_bytes` / :attr:`wire_layer_offsets`."""
+        if self.is_variable_rate:
+            raise ValueError(
+                f"codec {self.codec!r} has variable per-layer wire sizes; "
+                f"use wire_layer_bytes(layer) / wire_layer_offsets")
+        return self.wire_layer_bytes(0)
+
     @property
     def wire_chunk_bytes(self) -> int:
-        return self.num_layers * self.wire_per_layer_chunk_bytes
+        return self.wire_layer_offsets[-1]
+
+    @property
+    def mean_wire_layer_bytes(self) -> float:
+        """Average encoded per-layer stride — the scalar per-layer demand a
+        bandwidth scheduler sees (exact, not rounded: * L recovers the chunk
+        total)."""
+        return self.wire_chunk_bytes / self.num_layers
 
     @property
     def wire_bytes_per_token_per_layer(self) -> float:
         """Codec-adjusted analogue of Eq. 1's 2*n_kv*d*p byte density."""
-        return self.wire_per_layer_chunk_bytes / self.chunk_tokens
+        return self.mean_wire_layer_bytes / self.chunk_tokens
 
     def matched_wire_bytes(self, num_chunks: int) -> int:
-        """W_wire = N * L * S_wire — bytes that actually cross the wire."""
+        """W_wire = N * sum_l S_wire(l) — bytes that actually cross the wire."""
         return num_chunks * self.wire_chunk_bytes
 
     @property
     def wire_ratio(self) -> float:
-        """S_wire / S — < 1 under compression (the bytes-on-the-wire lever)."""
-        return self.wire_per_layer_chunk_bytes / self.per_layer_chunk_bytes
+        """W_wire / W — < 1 under compression (the bytes-on-the-wire lever)."""
+        return self.wire_chunk_bytes / self.chunk_bytes
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,7 +36,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.overlap import steady_pipeline_ttft
+from repro.core.overlap import gated_layerwise_ttft, steady_pipeline_ttft
 from repro.core.transport import (LOCAL_DRAM, RDMA_SESSION_SETUP_S,
                                   TransportProfile)
 from repro.core.types import KVSpec
@@ -93,13 +93,23 @@ def split_ttft(m: int, context: int, spec: KVSpec, compute,
         # fetching anything would never complete, so any m > 0 is infeasible
         # and the planner degenerates to pure recompute.
         return math.inf
+    extra = RDMA_SESSION_SETUP_S \
+        if session_setup and profile is not LOCAL_DRAM else 0.0
+    if spec.is_variable_rate:
+        # per-layer wire sizes (mixed-bit codec): the steady closed form's
+        # single stage no longer exists — evaluate the gated per-layer
+        # schedule exactly (prefix sums replace L*S_wire), the same
+        # recurrence `ServingSimulator.ttft_layerwise` and the cluster
+        # simulator use
+        per_layer = [m * spec.wire_layer_bytes(l) for l in range(L)]
+        _, avail, wire = profile.layer_pipeline(m, per_layer, rate,
+                                                startup_extra_s=extra)
+        return gated_layerwise_ttft(avail, wire, [c] * L)
     # transfer terms see the *wire* (codec-encoded) bytes: compression
     # shifts the compute-or-load crossover toward fetching
     layer_bytes = m * spec.wire_per_layer_chunk_bytes
     startup, first, stage = profile.stage_times(m, layer_bytes, rate)
-    if session_setup and profile is not LOCAL_DRAM:
-        startup += RDMA_SESSION_SETUP_S
-    return startup + steady_pipeline_ttft(L, first, stage, c)
+    return startup + extra + steady_pipeline_ttft(L, first, stage, c)
 
 
 def _closed_form_argmin(T, n: int, context: int, spec: KVSpec, compute,
@@ -118,6 +128,13 @@ def _closed_form_argmin(T, n: int, context: int, spec: KVSpec, compute,
         return min(range(n + 1), key=T)
     if rate is not None and rate <= 0.0:
         return 0  # no bandwidth: every m > 0 is infeasible (split_ttft = inf)
+    if spec.is_variable_rate:
+        # Per-layer wire sizes break the single-stage affine structure the
+        # candidate enumeration is exact for (each layer contributes its own
+        # max-branch boundary).  T is still O(L) to evaluate, so the exact
+        # answer is a plain scan — "closed form" here means deterministic
+        # arithmetic, not O(1).
+        return min(range(n + 1), key=T)
     L = spec.num_layers
     S = spec.wire_per_layer_chunk_bytes
     # Probe the shared stage-timing model at m=1 and m=2 rather than
@@ -202,7 +219,7 @@ def plan_split(context: int, matched_chunks: int, spec: KVSpec, compute,
         fetch_chunks=best, total_chunks=n, chunk_tokens=spec.chunk_tokens,
         ttft_s=T(best), fetch_ttft_s=T(n), recompute_ttft_s=T(0),
         layer_compute_s=compute.layer_compute_s(context, hit_eff),
-        bytes_per_layer=best * spec.wire_per_layer_chunk_bytes)
+        bytes_per_layer=best * spec.mean_wire_layer_bytes)
 
 
 def validate_split(context: int, matched_chunks: int, spec: KVSpec, compute,

@@ -68,7 +68,11 @@ class HybridReplanner:
         context = self.contexts.get(req.req_id)
         if context is None or rate <= 0.0:
             return None
-        n = int(round(req.bytes_per_layer / self.spec.wire_per_layer_chunk_bytes))
+        # demand carries the *mean* per-layer stride (variable-rate codecs
+        # included): total demand over the chunk total recovers the exact
+        # matched chunk count
+        n = int(round(req.bytes_per_layer * req.num_layers
+                      / self.spec.wire_chunk_bytes))
         if n <= 0:
             return None
         split = plan_split(context, n, self.spec, self.compute, self.profile,

@@ -3,11 +3,18 @@ quantized wire codecs (DESIGN.md §Codec).
 
 An aggregated layer payload lands as N per-chunk quantized tiles plus one
 fp16 scale vector per matrix per chunk.  Attention wants model-dtype arrays;
-this kernel fuses unpack (int4), int→float convert, and the per-channel scale
-multiply into one VMEM pass per chunk tile, so the dequantized KV never
-round-trips HBM in a temporary integer form.  Grid step i dequantizes chunk
-i's [R, W] tile against its own scale row — the per-chunk scale indirection
-is plain blocked indexing, no scalar prefetch needed.
+this kernel fuses unpack (int4), int→float convert, and the scale multiply
+into one VMEM pass per chunk tile, so the dequantized KV never round-trips
+HBM in a temporary integer form.  Grid step i dequantizes chunk i's [R, W]
+tile against its own scale row — the per-chunk scale indirection is plain
+blocked indexing, no scalar prefetch needed.
+
+Scale rows may be *group-wise* (DESIGN.md §Codec: one fp16 scale per
+``group`` consecutive channels): the kernels take the scale row at its
+stored width W/group and broadcast it across the group inside the same VMEM
+pass (``pltpu.repeat``-free: a plain `jnp.repeat` along the minor axis
+lowers to a broadcast+reshape the compiler fuses), so group-wise codecs pay
+no extra memory traffic.  ``group=1`` is the classic per-channel layout.
 
 Unlike the attention kernels these avoid the Pallas-TPU-only API surface
 (`pltpu.CompilerParams`), so they also run in interpret mode on CPU-only jax
@@ -16,56 +23,70 @@ relies on them.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _dequant_kernel(q_ref, s_ref, o_ref):
+def _expand_scales(s, group: int):
+    """[1, W/group] fp16 scale row → [1, W] fp32, inside the kernel body."""
+    s = s.astype(jnp.float32)
+    if group == 1:
+        return s
+    return jnp.repeat(s, group, axis=-1)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, group: int):
     q = q_ref[...].astype(jnp.float32)
-    s = s_ref[...].astype(jnp.float32)
+    s = _expand_scales(s_ref[...], group)
     o_ref[...] = (q * s[:, None, :]).astype(o_ref.dtype)
 
 
-def _dequant_packed4_kernel(q_ref, s_ref, o_ref):
+def _dequant_packed4_kernel(q_ref, s_ref, o_ref, *, group: int):
     qp = q_ref[...]
     # biased nibbles (n = q + 8): even channel in the low nibble
     lo = (qp & 0xF).astype(jnp.int32) - 8
     hi = (qp >> 4).astype(jnp.int32) - 8
     q = jnp.stack([lo, hi], axis=-1).reshape(
         qp.shape[0], qp.shape[1], 2 * qp.shape[2]).astype(jnp.float32)
-    s = s_ref[...].astype(jnp.float32)
+    s = _expand_scales(s_ref[...], group)
     o_ref[...] = (q * s[:, None, :]).astype(o_ref.dtype)
 
 
-def kv_dequant(q, scales, *, out_dtype=jnp.float32,
+def kv_dequant(q, scales, *, group: int = 1, out_dtype=jnp.float32,
                interpret: bool = False) -> jnp.ndarray:
-    """q: [N, R, W] int8; scales: [N, W] fp16 → [N, R, W] ``out_dtype``."""
+    """q: [N, R, W] int8; scales: [N, W/group] fp16 → [N, R, W]
+    ``out_dtype``."""
     N, R, W = q.shape
-    assert scales.shape == (N, W), (q.shape, scales.shape)
+    ng = W // group
+    assert scales.shape == (N, ng), (q.shape, scales.shape, group)
     return pl.pallas_call(
-        _dequant_kernel,
+        functools.partial(_dequant_kernel, group=group),
         grid=(N,),
         in_specs=[pl.BlockSpec((1, R, W), lambda i: (i, 0, 0)),
-                  pl.BlockSpec((1, W), lambda i: (i, 0))],
+                  pl.BlockSpec((1, ng), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, R, W), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((N, R, W), out_dtype),
         interpret=interpret,
     )(q, scales)
 
 
-def kv_dequant_packed4(q_packed, scales, *, out_dtype=jnp.float32,
+def kv_dequant_packed4(q_packed, scales, *, group: int = 1,
+                       out_dtype=jnp.float32,
                        interpret: bool = False) -> jnp.ndarray:
     """q_packed: [N, R, W/2] uint8 (pairwise int4, `codec.ref.pack_int4`);
-    scales: [N, W] fp16 → [N, R, W] ``out_dtype``."""
+    scales: [N, W/group] fp16 → [N, R, W] ``out_dtype``."""
     N, R, Wh = q_packed.shape
     W = 2 * Wh
-    assert scales.shape == (N, W), (q_packed.shape, scales.shape)
+    ng = W // group
+    assert scales.shape == (N, ng), (q_packed.shape, scales.shape, group)
     return pl.pallas_call(
-        _dequant_packed4_kernel,
+        functools.partial(_dequant_packed4_kernel, group=group),
         grid=(N,),
         in_specs=[pl.BlockSpec((1, R, Wh), lambda i: (i, 0, 0)),
-                  pl.BlockSpec((1, W), lambda i: (i, 0))],
+                  pl.BlockSpec((1, ng), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, R, W), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((N, R, W), out_dtype),
         interpret=interpret,

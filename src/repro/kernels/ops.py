@@ -30,13 +30,19 @@ def dequant_supported() -> bool:
     Mirrors the test-suite probe: actually execute a trivial call rather than
     sniff versions.  The dequant kernels avoid the Pallas-TPU-only API
     surface, so they normally pass even on CPU-only builds (interpret mode);
-    the serving client falls back to the numpy reference when they don't."""
+    the serving client falls back to the numpy reference when they don't.
+    Probes the group-wise scale path too — a build where only the grouped
+    broadcast fails must fall back for every codec rather than crash on the
+    first gw/mixed payload."""
     try:
         q = jnp.zeros((1, 2, 4), jnp.int8)
         qp = jnp.zeros((1, 2, 2), jnp.uint8)
         s = jnp.ones((1, 4), jnp.float16)
+        sg = jnp.ones((1, 2), jnp.float16)
         kv_dequant_op(q, s)
         kv_dequant_packed4_op(qp, s)
+        kv_dequant_op(q, sg, group=2)
+        kv_dequant_packed4_op(qp, sg, group=2)
         return True
     except Exception:  # pragma: no cover - environment dependent
         return False
@@ -65,16 +71,20 @@ def kv_gather_op(pool, indices, *, interpret: bool | None = None):
     return _gather(pool, indices, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
-def kv_dequant_op(q, scales, *, out_dtype=jnp.float32,
+@functools.partial(jax.jit, static_argnames=("group", "out_dtype",
+                                             "interpret"))
+def kv_dequant_op(q, scales, *, group: int = 1, out_dtype=jnp.float32,
                   interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
-    return _dequant(q, scales, out_dtype=out_dtype, interpret=interpret)
+    return _dequant(q, scales, group=group, out_dtype=out_dtype,
+                    interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
-def kv_dequant_packed4_op(q_packed, scales, *, out_dtype=jnp.float32,
+@functools.partial(jax.jit, static_argnames=("group", "out_dtype",
+                                             "interpret"))
+def kv_dequant_packed4_op(q_packed, scales, *, group: int = 1,
+                          out_dtype=jnp.float32,
                           interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
-    return _dequant_p4(q_packed, scales, out_dtype=out_dtype,
+    return _dequant_p4(q_packed, scales, group=group, out_dtype=out_dtype,
                        interpret=interpret)

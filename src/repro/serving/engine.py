@@ -208,7 +208,7 @@ class ServingEngine:
             # quantized payloads dequantize on device (fused Pallas kernel
             # when available), identity payloads are a bit view
             k_d, v_d = layer_payload_to_device_kv(res.payloads[l], n_chunks,
-                                                  self.spec, act)
+                                                  self.spec, act, layer=l)
             pk, pv = k_d[None], v_d[None]
             t0 = time.perf_counter()
             x, sk, sv = self._layer(self._layer_params(l), x, pk, pv, positions)
@@ -259,8 +259,8 @@ class ServingEngine:
     def _payloads_to_prefix(self, payloads, n_chunks):
         act = jnp.dtype(self.cfg.compute_dtype)
         ks, vs = [], []
-        for p in payloads:
-            k, v = layer_payload_to_kv(p, n_chunks, self.spec, act)
+        for layer, p in enumerate(payloads):
+            k, v = layer_payload_to_kv(p, n_chunks, self.spec, act, layer)
             ks.append(k)
             vs.append(v)
         return jnp.asarray(np.stack([np.stack(ks), np.stack(vs)], axis=1))[:, :, None]

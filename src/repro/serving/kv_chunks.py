@@ -49,45 +49,49 @@ def cache_to_chunks(cache, keys: list[bytes], spec: KVSpec, batch_row: int = 0,
     return out
 
 
-def layer_payload_to_kv(payload: bytes, num_chunks: int, spec: KVSpec, dtype
-                        ) -> tuple[np.ndarray, np.ndarray]:
+def layer_payload_to_kv(payload: bytes, num_chunks: int, spec: KVSpec, dtype,
+                        layer: int = 0) -> tuple[np.ndarray, np.ndarray]:
     """One aggregated layer payload -> (k, v) [P, KV, dh] arrays (P = N*G).
 
     Host-side decode: identity is a bit view; quantized codecs dequantize via
-    the numpy reference."""
+    the numpy reference.  ``layer`` selects the per-layer parameters of a
+    variable-rate codec (mixed-bit); uniform codecs ignore it."""
     codec = get_codec(spec.codec)
     k, v = codec.decode_layer_payload(payload, num_chunks, spec,
-                                      np.dtype(jnp.dtype(dtype)))
+                                      np.dtype(jnp.dtype(dtype)), layer=layer)
     P = num_chunks * spec.chunk_tokens
     shape = (P, spec.num_kv_heads, spec.head_dim)
     return k.reshape(shape), v.reshape(shape)
 
 
 def layer_payload_to_device_kv(payload: bytes, num_chunks: int, spec: KVSpec,
-                               dtype) -> tuple[jnp.ndarray, jnp.ndarray]:
+                               dtype, layer: int = 0
+                               ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Device-side decode of one aggregated layer payload -> (k, v) jnp
     [P, KV, dh].
 
     For quantized codecs this uploads the *compressed* tensors (int8/packed
-    int4 + fp16 scales) and runs the fused Pallas dequant kernel, so the
-    host->device copy moves wire bytes, not decoded bytes.  Falls back to the
-    numpy reference when the kernel API is unavailable on this build."""
+    int4 + fp16 scales, possibly group-wise) and runs the fused Pallas
+    dequant kernel, so the host->device copy moves wire bytes, not decoded
+    bytes.  Falls back to the numpy reference when the kernel API is
+    unavailable on this build."""
     codec = get_codec(spec.codec)
     G = spec.chunk_tokens
     P = num_chunks * G
     shape = (P, spec.num_kv_heads, spec.head_dim)
     if codec.lossless or not kernel_ops.dequant_supported():
-        k, v = layer_payload_to_kv(payload, num_chunks, spec, dtype)
+        k, v = layer_payload_to_kv(payload, num_chunks, spec, dtype, layer)
         return jnp.asarray(k), jnp.asarray(v)
-    q, scales = codec.parse_layer_payload(payload, num_chunks, spec)
-    op = (kernel_ops.kv_dequant_packed4_op if codec.bits == 4
-          else kernel_ops.kv_dequant_op)
+    q, scales = codec.parse_layer_payload(payload, num_chunks, spec, layer)
+    group = getattr(codec, "group", 1)
+    op = (kernel_ops.kv_dequant_packed4_op
+          if codec.layer_bits(spec, layer) == 4 else kernel_ops.kv_dequant_op)
     kq = np.ascontiguousarray(q[:, :G])
     vq = np.ascontiguousarray(q[:, G:])
     k = op(jnp.asarray(kq), jnp.asarray(np.ascontiguousarray(scales[:, 0, :])),
-           out_dtype=jnp.dtype(dtype))
+           group=group, out_dtype=jnp.dtype(dtype))
     v = op(jnp.asarray(vq), jnp.asarray(np.ascontiguousarray(scales[:, 1, :])),
-           out_dtype=jnp.dtype(dtype))
+           group=group, out_dtype=jnp.dtype(dtype))
     return k.reshape(shape), v.reshape(shape)
 
 
@@ -95,8 +99,8 @@ def prefix_kv_from_payloads(payloads: list[bytes], num_chunks: int,
                             spec: KVSpec, dtype) -> jnp.ndarray:
     """All layers -> [L, 2, 1, P, KV, dh] prefix-KV (batch dim of 1)."""
     ks, vs = [], []
-    for payload in payloads:
-        k, v = layer_payload_to_kv(payload, num_chunks, spec, dtype)
+    for layer, payload in enumerate(payloads):
+        k, v = layer_payload_to_kv(payload, num_chunks, spec, dtype, layer)
         ks.append(k)
         vs.append(v)
     k = np.stack(ks)[:, None]  # [L, 1, P, KV, dh] -> stack along new axis 1

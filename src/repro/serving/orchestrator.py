@@ -106,8 +106,11 @@ class Orchestrator:
         rate = None
         if delivery is Delivery.LAYERWISE and (self.pool is not None
                                                or self.cap is not None):
+            # per-layer demand is the *mean* encoded stride: variable-rate
+            # codecs still present one scalar s_i to the water-filler, and
+            # s_i * L recovers the exact wire total
             me = FlowRequest(req_id,
-                             match.num_chunks * self.spec.wire_per_layer_chunk_bytes,
+                             match.num_chunks * self.spec.mean_wire_layer_bytes,
                              layer_compute_s, self.spec.num_layers)
             if self.pool is not None:
                 # event-driven: join the shared pool and re-shape every

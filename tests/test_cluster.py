@@ -393,3 +393,104 @@ class TestEventClockPlanning:
         assert now == t0 and req_id == "r0"
         assert 0 < fetch_chunks < 16384 * 0.875 // 64
         assert rate == pytest.approx(2 * GBPS)
+
+
+# ---------------------------------------------------------------------------
+# Variable-rate (mixed-bit codec) conformance: per-layer wire bytes differ
+# ---------------------------------------------------------------------------
+MIXED32 = "mixed/" + "8" * 8 + "4" * 24 + "/g128"  # paper-geometry bit map
+
+
+class TestVariableRateConformance:
+    """Single-request event-sim TTFT must match the gated per-layer closed
+    forms at 1e-9 when per-layer wire bytes differ (DESIGN.md §Codec: the
+    mixed-bit codec's size table; `overlap.gated_layerwise_schedule`)."""
+
+    @pytest.mark.parametrize("context,hit", GRID)
+    def test_layerwise_unthrottled(self, context, hit):
+        sim = ServingSimulator(codec=MIXED32)
+        w = WorkloadRequest("r0", context, hit)
+        rec = _one(context, hit, cap_bps=None, codec=MIXED32)
+        assert rec.ttft_s == pytest.approx(sim.ttft_layerwise(w).ttft_s,
+                                           abs=1e-9)
+
+    @pytest.mark.parametrize("context,hit", GRID)
+    @pytest.mark.parametrize("cap_gbps", [10, 50])
+    def test_layerwise_capped(self, context, hit, cap_gbps):
+        sim = ServingSimulator(codec=MIXED32)
+        w = WorkloadRequest("r0", context, hit)
+        cap = cap_gbps * GBPS
+        rate = allocate([sim.flow_request(w)], cap, Policy.CAL_STALL_OPT,
+                        PAPER_MARGIN_BPS)["r0"]
+        rec = _one(context, hit, cap_bps=cap, policy=Policy.CAL_STALL_OPT,
+                   margin_bps=PAPER_MARGIN_BPS, codec=MIXED32)
+        want = sim.ttft_layerwise(w, rate_limit=rate).ttft_s
+        assert rec.ttft_s == pytest.approx(want, abs=1e-9)
+
+    @pytest.mark.parametrize("context,hit", [(16384, 0.875), (65536, 0.5)])
+    def test_chunkwise(self, context, hit):
+        sim = ServingSimulator(codec=MIXED32)
+        w = WorkloadRequest("r0", context, hit)
+        rec = _one(context, hit, cap_bps=None, profile=S3_RDMA_BATCH,
+                   mode="chunkwise", codec=MIXED32)
+        assert rec.ttft_s == pytest.approx(sim.ttft_chunkwise(w).ttft_s,
+                                           abs=1e-9)
+
+    def test_hybrid_split_endpoint_matches_planner(self):
+        """split_ttft's pure-fetch endpoint under the mixed codec equals the
+        event sim (the planner's per-layer prefix-sum forms and the fluid
+        integration share the gated recurrence)."""
+        from repro.core.compute_model import PaperComputeModel
+        compute = PaperComputeModel()
+        sim = ServingSimulator(compute, codec=MIXED32)
+        spec = sim.kv_spec(64)
+        n = int(16384 * 0.875) // 64
+        rec = _one(16384, 0.875, cap_bps=None, codec=MIXED32)
+        want = split_ttft(n, 16384, spec, compute, S3_RDMA_AGG, None)
+        assert rec.ttft_s == pytest.approx(want, abs=1e-9)
+
+    def test_mixed_bytes_on_the_wire_follow_the_size_table(self):
+        """The flow's wire total equals N * sum(wire_layer_bytes) — the
+        size-table bytes, not L * any single stride."""
+        spec = ServingSimulator(codec=MIXED32).kv_spec(64)
+        n = int(16384 * 0.875) // 64
+        rec = _one(16384, 0.875, cap_bps=None, codec=MIXED32)
+        assert rec.bytes_total == pytest.approx(n * spec.wire_chunk_bytes,
+                                                rel=1e-12)
+
+
+class TestGoldenTraceMixed:
+    """Golden-trace regression for a mixed-bit workload: committed Poisson
+    trace + expected per-request table (generated at the PR that introduced
+    variable-rate codecs; byte totals pin the size-table accounting)."""
+
+    def _run(self):
+        trace = load_trace(os.path.join(DATA, "golden_trace_mixed.json"))
+        sim = ClusterSim(cap_bps=50 * GBPS, policy=Policy.CAL_STALL_OPT,
+                         margin_bps=PAPER_MARGIN_BPS, codec=MIXED32)
+        return sim.run(trace)
+
+    def test_replay_matches_committed_table(self):
+        with open(os.path.join(DATA,
+                               "golden_trace_mixed_expected.json")) as f:
+            expected = json.load(f)
+        res = self._run()
+        got = {r.req_id: r for r in res.records}
+        assert len(got) == len(expected["requests"])
+        for row in expected["requests"]:
+            r = got[row["req_id"]]
+            for field in ("arrival_s", "admit_s", "flow_done_s",
+                          "prefill_done_s", "ttft_s"):
+                assert getattr(r, field) == pytest.approx(row[field],
+                                                          abs=1e-9), \
+                    (row["req_id"], field)
+            assert r.bytes_total == pytest.approx(row["bytes_total"],
+                                                  rel=1e-12)
+        assert res.reallocs == expected["reallocs"]
+        assert res.events == expected["events"]
+
+    def test_same_seed_is_bit_identical(self):
+        a, b = self._run(), self._run()
+        ra = [(r.req_id, r.ttft_s, r.flow_done_s) for r in a.records]
+        rb = [(r.req_id, r.ttft_s, r.flow_done_s) for r in b.records]
+        assert ra == rb

@@ -50,3 +50,24 @@ def test_hybrid_prefill():
 def test_train_ft():
     out = _run_example("train_ft.py")
     assert "OK: training survived failure and converged" in out
+
+
+def test_bench_run_only_unknown_name_fails_fast():
+    """`benchmarks/run.py --only <typo>` must exit non-zero before running
+    anything, and name the known benchmarks in the message."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "no_such_bench"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=120)
+    assert out.returncode != 0
+    assert "unknown benchmark 'no_such_bench'" in out.stderr
+    assert "bench_codec" in out.stderr  # the fix-it list is printed
+    assert "name,us_per_call" not in out.stdout  # nothing ran
+
+def test_bench_run_list():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--list"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0
+    assert "bench_codec" in out.stdout and "bench_cluster" in out.stdout

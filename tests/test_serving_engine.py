@@ -1,5 +1,7 @@
 """End-to-end serving integration: real bytes through the object store, real
 JAX compute, ObjectCache reuse correctness and TTFT accounting."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,11 +16,18 @@ from repro.serving.orchestrator import StragglerModel
 G = 8  # chunk tokens
 
 
-def _mk_engine(arch="qwen3-0.6b", theta=0, cap=None, hedge=False, sigma=0.0,
-               min_hit_chunks=1, codec="identity"):
+@functools.lru_cache(maxsize=None)
+def _model_and_params(arch: str):
+    """One model + param init per arch for the whole module (params are
+    read-only; every engine gets its own store/index/orchestrator)."""
     cfg = get_smoke_config(arch)
     model = build_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _mk_engine(arch="qwen3-0.6b", theta=0, cap=None, hedge=False, sigma=0.0,
+               min_hit_chunks=1, codec="identity"):
+    cfg, model, params = _model_and_params(arch)
     spec = cfg.kv_spec(G, dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize,
                        codec=codec)
     store = InMemoryStore()
@@ -159,6 +168,57 @@ class TestWireCodecs:
         # same encoded objects, same dequant values -> near-identical logits
         np.testing.assert_allclose(r_lw.logits, r_cw.logits, rtol=1e-4,
                                    atol=1e-4)
+
+
+class TestCodecConformanceMatrix:
+    """Delivery mode x codec family conformance (DESIGN.md §Codec): the
+    identity codec must be bit-exact against the no-cache prefill in every
+    delivery mode; each quantized codec's end-to-end max |dlogit| must stay
+    under its per-codec bound.  The smoke model is 2 layers wide 32, so the
+    group-wise variants use explicit /g16 groups and the mixed map has two
+    digits (layer 0 at 8 bits — the sensitive one — layer 1 at 4)."""
+
+    # per-codec max|dlogit| bounds, calibrated with ~2x headroom over the
+    # measured smoke-model values (identity must be exactly 0)
+    CODEC_BOUNDS = [("identity", 0.0), ("int8", 0.02), ("int4", 0.35),
+                    ("gw8/g16", 0.03), ("gw4/g16", 0.4),
+                    ("mixed/84/g16", 0.1)]
+
+    @pytest.mark.parametrize("delivery", ["layerwise", "chunkwise"])
+    @pytest.mark.parametrize("codec,bound", CODEC_BOUNDS)
+    def test_matrix(self, delivery, codec, bound):
+        theta = 0 if delivery == "layerwise" else 1 << 60
+        engine, store, _ = _mk_engine(theta=theta, codec=codec)
+        rng = np.random.default_rng(23)
+        prompt = rng.integers(0, 200, size=48)
+        cold = engine.submit(prompt, "cold")
+        warm = engine.submit(prompt, "warm")
+        assert warm.hit
+        want = (Delivery.LAYERWISE if delivery == "layerwise"
+                else Delivery.CHUNKWISE)
+        assert warm.delivery is want
+        if bound == 0.0:
+            np.testing.assert_array_equal(warm.logits, cold.logits)
+        else:
+            err = float(np.abs(warm.logits - cold.logits).max())
+            assert 0.0 < err < bound, (codec, delivery, err)
+        # the store holds encoded bytes: every commit is wire-sized
+        assert store.stats.snapshot()["bytes_written"] \
+            == engine.stats.commits * engine.spec.wire_chunk_bytes
+
+    def test_mixed_map_orientation_matters(self):
+        """The calibration premise end-to-end: spending the 8-bit layer on
+        layer 0 (sensitive) must beat spending it on layer 1."""
+        rng = np.random.default_rng(24)
+        prompt = rng.integers(0, 200, size=48)
+        errs = {}
+        for codec in ("mixed/84/g16", "mixed/48/g16"):
+            engine, *_ = _mk_engine(codec=codec)
+            cold = engine.submit(prompt, "cold")
+            warm = engine.submit(prompt, "warm")
+            assert warm.hit
+            errs[codec] = float(np.abs(warm.logits - cold.logits).max())
+        assert errs["mixed/84/g16"] < errs["mixed/48/g16"]
 
 
 class TestTTFTAccounting:
