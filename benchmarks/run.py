@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_granularity           Table A6 + Fig 3 (recompute vs granularity)
   bench_hybrid                compute-or-load crossover (Cake-style sweep)
   bench_codec                 KV wire codecs (DESIGN.md §Codec): bytes/TTFT/accuracy
+  bench_fleet                 fleet cache economy (DESIGN.md §Fleet): routers/policies
   bench_kernels               Pallas kernels vs oracles
   bench_engine                real serving engine (cold/warm, batching)
 
@@ -27,14 +28,15 @@ import sys
 import traceback
 
 from . import (bench_aggregation, bench_bandwidth_sensitivity, bench_cluster,
-               bench_codec, bench_engine, bench_granularity, bench_hybrid,
-               bench_kernels, bench_overlap, bench_request_overhead,
-               bench_scheduler, bench_transport, bench_ttft)
+               bench_codec, bench_engine, bench_fleet, bench_granularity,
+               bench_hybrid, bench_kernels, bench_overlap,
+               bench_request_overhead, bench_scheduler, bench_transport,
+               bench_ttft)
 
 MODULES = [bench_transport, bench_request_overhead, bench_aggregation,
            bench_overlap, bench_ttft, bench_bandwidth_sensitivity,
            bench_scheduler, bench_cluster, bench_granularity, bench_hybrid,
-           bench_codec, bench_kernels, bench_engine]
+           bench_codec, bench_fleet, bench_kernels, bench_engine]
 
 
 def _short_name(mod) -> str:

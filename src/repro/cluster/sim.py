@@ -160,9 +160,13 @@ class ClusterSim:
                       dtype_bytes=2, codec=self.codec)
 
     # -- one run --------------------------------------------------------------
-    def run(self, trace: Union[Sequence[TraceRequest], ClosedLoopTrace]
-            ) -> ClusterResult:
-        self._queue = EventQueue()
+    # run() decomposes into begin/seed/dispatch/finish so a fleet driver
+    # (repro.fleet.sim.FleetSim) can give N node sims one *shared* queue and
+    # route each popped event to its owning node — a single node driven that
+    # way replays bit-for-bit what run() does.
+    def begin(self, queue: Optional[EventQueue] = None) -> None:
+        """Reset per-run state; ``queue`` injects a shared event queue."""
+        self._queue = queue if queue is not None else EventQueue()
         self._active: dict[str, _ActiveFlow] = {}
         self._backlog: collections.deque[TraceRequest] = collections.deque()
         self._records: list[RequestRecord] = []
@@ -170,30 +174,32 @@ class ClusterSim:
         self._realloc_scheduled_t: Optional[float] = None
         self._counts = {k.value: 0 for k in EventKind}
         self._sim_reallocs = 0
+        self._closed = None
 
+    def seed(self, trace: Union[Sequence[TraceRequest], ClosedLoopTrace]
+             ) -> None:
         if isinstance(trace, ClosedLoopTrace) or hasattr(trace, "initial"):
             self._closed = trace
             initial = list(trace.initial())
         else:
-            self._closed = None
             initial = sorted(trace, key=lambda r: (r.arrival_s, r.req_id))
         for tr in initial:
             self._queue.push(Event(tr.arrival_s, EventKind.ARRIVE, payload=tr))
 
-        while self._queue:
-            ev = self._queue.pop()
-            self.clock.advance_to(ev.time)
-            self._counts[ev.kind.value] += 1
-            handler = {
-                EventKind.ARRIVE: self._on_arrive,
-                EventKind.WIRE: self._on_wire,
-                EventKind.LAYER_READY: self._on_layer_ready,
-                EventKind.FLOW_DONE: self._on_flow_done,
-                EventKind.PREFILL_DONE: self._on_prefill_done,
-                EventKind.REALLOC: self._on_realloc,
-            }[ev.kind]
-            handler(ev)
+    def dispatch(self, ev: Event) -> None:
+        self.clock.advance_to(ev.time)
+        self._counts[ev.kind.value] += 1
+        handler = {
+            EventKind.ARRIVE: self._on_arrive,
+            EventKind.WIRE: self._on_wire,
+            EventKind.LAYER_READY: self._on_layer_ready,
+            EventKind.FLOW_DONE: self._on_flow_done,
+            EventKind.PREFILL_DONE: self._on_prefill_done,
+            EventKind.REALLOC: self._on_realloc,
+        }[ev.kind]
+        handler(ev)
 
+    def finish(self) -> ClusterResult:
         pool = self.pool
         return ClusterResult(
             records=self._records,
@@ -201,10 +207,19 @@ class ClusterSim:
             replans=pool.replans if pool else 0,
             events=dict(self._counts))
 
+    def run(self, trace: Union[Sequence[TraceRequest], ClosedLoopTrace]
+            ) -> ClusterResult:
+        self.begin()
+        self.seed(trace)
+        while self._queue:
+            self.dispatch(self._queue.pop())
+        return self.finish()
+
     # -- event handlers -------------------------------------------------------
     def _on_arrive(self, ev: Event) -> None:
         tr: TraceRequest = ev.payload
-        rec = RequestRecord(tr.req_id, tr.context, tr.hit_rate, tr.arrival_s)
+        rec = RequestRecord(tr.req_id, tr.context, tr.hit_rate, tr.arrival_s,
+                            tenant=tr.tenant, hot_tokens=tr.hot_tokens)
         self._records.append(rec)
         self._backlog.append(tr)
         if self.epoch_s is None:
@@ -297,7 +312,10 @@ class ClusterSim:
 
     def _flow_request(self, tr: TraceRequest) -> FlowRequest:
         spec = self.kv_spec(tr.chunk_tokens)
-        n_chunks = tr.cached_tokens // tr.chunk_tokens
+        # only non-hot cached chunks cross the wire — chunks resident in the
+        # node's hot tier (tr.hot_tokens, set by the fleet cache layer) are
+        # consumed from local DRAM; compute still follows the full hit rate
+        n_chunks = tr.fetch_tokens // tr.chunk_tokens
         # per-flow bandwidth demand is the codec-encoded (wire) byte count;
         # the mean per-layer stride keeps variable-rate codecs a scalar s_i
         layer_bytes = n_chunks * spec.mean_wire_layer_bytes

@@ -21,22 +21,41 @@ import random
 from typing import Iterable, Optional, Sequence
 
 TRACE_FORMAT = "objectcache-cluster-trace"
-TRACE_VERSION = 1
+TRACE_VERSION = 2  # v2 adds tenant / prefix_id / hot_tokens (all defaulted)
+_READABLE_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
 class TraceRequest:
-    """One arrival: a workload-grid request with an arrival timestamp."""
+    """One arrival: a workload-grid request with an arrival timestamp.
+
+    The fleet fields are optional: ``tenant`` names the owning tenant,
+    ``prefix_id`` names the shareable prefix population member (same id =
+    same leading chunk-key chain, the dedup unit of the radix namespace),
+    and ``hot_tokens`` is the part of the cached prefix resident in the
+    serving node's hot tier — those tokens cost neither wire bytes nor
+    recompute.  v1 traces load with the defaults.
+    """
 
     req_id: str
     arrival_s: float
     context: int  # C, tokens
     hit_rate: float  # r
     chunk_tokens: int = 64  # G
+    tenant: str = ""
+    prefix_id: str = ""
+    hot_tokens: int = 0
 
     @property
     def cached_tokens(self) -> int:
-        return int(self.context * self.hit_rate)
+        # +1e-9 absorbs fp error when hit_rate was derived as m*G/context
+        # (fleet cache matching) so the product recovers exactly m*G
+        return int(self.context * self.hit_rate + 1e-9)
+
+    @property
+    def fetch_tokens(self) -> int:
+        """Cached tokens that must actually cross the wire (not hot)."""
+        return max(0, self.cached_tokens - self.hot_tokens)
 
 
 # The paper's §5.7 request mix (context, hit-rate) used as the default
@@ -117,7 +136,7 @@ def load_trace(path: str) -> list[TraceRequest]:
         doc = json.load(f)
     if doc.get("format") != TRACE_FORMAT:
         raise ValueError(f"{path}: not a {TRACE_FORMAT} file")
-    if doc.get("version") != TRACE_VERSION:
+    if doc.get("version") not in _READABLE_VERSIONS:
         raise ValueError(f"{path}: unsupported trace version {doc.get('version')}")
     reqs = [TraceRequest(**r) for r in doc["requests"]]
     return sorted(reqs, key=lambda r: (r.arrival_s, r.req_id))

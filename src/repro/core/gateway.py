@@ -73,6 +73,12 @@ class Gateway:
         # PUT cost symmetric to GET for our purposes.
         return prof.single_get(len(data))
 
+    def delete(self, key: bytes) -> None:
+        """Control-plane DELETE — evicted chunk objects must actually leave
+        the store, or index eviction silently leaks storage forever."""
+        self.store.delete(key)
+        self.requests_served += 1
+
     def get(self, key: bytes, path: S3Path = S3Path.RDMA_DIRECT,
             rate_limit: Optional[float] = None) -> GetResult:
         prof = self.profiles[path]

@@ -12,11 +12,11 @@ l*S, S)).
 """
 from __future__ import annotations
 
-import collections
 import os
 import threading
+import time
 from abc import ABC, abstractmethod
-from typing import Iterable, Optional
+from typing import Callable
 
 
 class ObjectStore(ABC):
@@ -48,7 +48,7 @@ class StoreStats:
     """
 
     _FIELDS = ("puts", "gets", "range_gets", "bytes_read", "bytes_written",
-               "dedup_hits")
+               "dedup_hits", "deletes", "evictions")
 
     def __init__(self) -> None:
         for f in self._FIELDS:
@@ -97,7 +97,8 @@ class InMemoryStore(ObjectStore):
 
     def delete(self, key: bytes) -> None:
         with self._lock:
-            self._data.pop(key, None)
+            if self._data.pop(key, None) is not None:
+                self.stats.add(deletes=1)
 
     def object_size(self, key: bytes) -> int:
         with self._lock:
@@ -153,6 +154,7 @@ class FileStore(ObjectStore):
     def delete(self, key: bytes) -> None:
         try:
             os.remove(self._path(key))
+            self.stats.add(deletes=1)
         except FileNotFoundError:
             pass
 
@@ -163,18 +165,29 @@ class FileStore(ObjectStore):
 class TieredStore(ObjectStore):
     """DRAM hot cache over a cold object tier (paper §6.1).
 
-    Reads promote into the hot tier (LRU, byte-capacity bound); writes go
+    Reads promote into the hot tier (byte-capacity bound); writes go
     through to the cold tier and optionally populate hot.  ObjectCache is the
     *capacity* tier; this class is how a deployment keeps its hottest prefixes
     near the serving node without changing any protocol semantics.
+
+    Hot-tier victim selection is delegated to an `EvictionPolicy`
+    (`repro.fleet.policy`; default LRU = the historical behaviour) — the same
+    interface `RadixIndex` consumes, so a fleet deployment ranks index
+    eviction and hot-tier residency with one policy family (DESIGN.md §Fleet).
     """
 
     def __init__(self, cold: ObjectStore, hot_capacity_bytes: int,
-                 populate_on_write: bool = True) -> None:
+                 populate_on_write: bool = True, hot_policy=None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
         self.cold = cold
         self.hot_capacity = hot_capacity_bytes
         self.populate_on_write = populate_on_write
-        self._hot: "collections.OrderedDict[bytes, bytes]" = collections.OrderedDict()
+        if hot_policy is None:
+            from repro.fleet.policy import LRUPolicy
+            hot_policy = LRUPolicy()
+        self._policy = hot_policy
+        self._clock = clock
+        self._hot: dict[bytes, bytes] = {}
         self._hot_bytes = 0
         self._lock = threading.RLock()
         self.stats = StoreStats()  # aggregate, whichever tier served
@@ -203,14 +216,20 @@ class TieredStore(ObjectStore):
         if len(data) > self.hot_capacity:
             return
         with self._lock:
+            now = self._clock()
             if key in self._hot:
-                self._hot.move_to_end(key)
+                self._policy.touch(key, now)
                 return
             self._hot[key] = data
             self._hot_bytes += len(data)
+            self._policy.add(key, len(data), now)
             while self._hot_bytes > self.hot_capacity:
-                _, victim = self._hot.popitem(last=False)
-                self._hot_bytes -= len(victim)
+                victim = self._policy.pop_victim(now)
+                if victim is None:
+                    break  # policy tracks nothing else — cannot shrink
+                evicted = self._hot.pop(victim)
+                self._hot_bytes -= len(evicted)
+                self.hot_stats.add(evictions=1)
 
     def put(self, key: bytes, data: bytes) -> None:
         with self._lock:  # atomic contains+put: racing writers of the same
@@ -229,7 +248,7 @@ class TieredStore(ObjectStore):
         with self._lock:
             hit = self._hot.get(key)
             if hit is not None:
-                self._hot.move_to_end(key)
+                self._policy.touch(key, self._clock())
                 self.hot_hits += 1
                 self.hot_stats.add(gets=1, bytes_read=len(hit))
                 self.stats.add(bytes_read=len(hit))
@@ -245,7 +264,7 @@ class TieredStore(ObjectStore):
         with self._lock:
             hit = self._hot.get(key)
             if hit is not None:
-                self._hot.move_to_end(key)
+                self._policy.touch(key, self._clock())
                 self.hot_hits += 1
                 self.hot_stats.add(range_gets=1, bytes_read=length)
                 self.stats.add(bytes_read=length)
@@ -274,7 +293,9 @@ class TieredStore(ObjectStore):
             data = self._hot.pop(key, None)
             if data is not None:
                 self._hot_bytes -= len(data)
+                self._policy.remove(key)
         self.cold.delete(key)
+        self.stats.add(deletes=1)
 
     def object_size(self, key: bytes) -> int:
         with self._lock:

@@ -89,7 +89,15 @@ class Orchestrator:
         self.pool = pool
         self.clock = clock
         self.stats = {"hits": 0, "misses": 0, "fallbacks": 0, "hedged": 0,
-                      "hybrid_splits": 0, "reallocs": 0}
+                      "hybrid_splits": 0, "reallocs": 0, "evicted_objects": 0}
+        # index eviction must delete the backing objects, or the store leaks
+        # every evicted chunk forever; respect a callback the caller installed
+        if self.index.on_evict is None:
+            self.index.on_evict = self._on_index_evict
+
+    def _on_index_evict(self, key: bytes) -> None:
+        self.gateway.delete(key)
+        self.stats["evicted_objects"] += 1
 
     # -- planning ------------------------------------------------------------
     def plan(self, tokens, layer_compute_s: float,
@@ -174,6 +182,8 @@ class Orchestrator:
     def commit(self, tokens, chunk_objects: dict[bytes, bytes]) -> list[bytes]:
         new_keys = self.index.insert(tokens)
         for key in new_keys:
-            if key in chunk_objects:
+            # a key the insert itself already evicted must not be uploaded —
+            # that would orphan the object (nothing would ever delete it)
+            if key in chunk_objects and self.index.contains(key):
                 self.gateway.put(key, chunk_objects[key])
         return new_keys

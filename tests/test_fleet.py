@@ -1,0 +1,758 @@
+"""Fleet-scale cache economy (DESIGN.md §Fleet): eviction policies, the
+radix-index/store coherence contract, Zipfian workload generators, routing,
+and the multi-node fleet simulator — including the 1-node conformance oracle
+against `ClusterSim` and the committed golden fleet trace."""
+import json
+import math
+import os
+import random
+import threading
+
+import pytest
+
+from repro.cluster import (ClosedLoopTrace, ClusterSim, TraceRequest,
+                           load_trace, poisson_trace, save_trace, summarize)
+from repro.cluster.metrics import RequestRecord, per_tenant
+from repro.core.gateway import Gateway
+from repro.core.hashing import GENESIS, chunk_keys
+from repro.core.object_store import InMemoryStore, TieredStore
+from repro.core.radix import RadixIndex
+from repro.core.types import KVSpec
+from repro.fleet import (AffinityRouter, ConsistentHashRouter, GDSFPolicy,
+                         LFUPolicy, LRUPolicy, RandomRouter, RoundRobinRouter,
+                         TTLPolicy, make_policy, make_router, rag_trace,
+                         tenant_churn_trace, working_set_chunks,
+                         zipf_system_prompt_trace)
+from repro.fleet.sim import (ByteLedgerStore, CacheConfig, FleetSim,
+                             NodeCache, derive_chain, request_chain)
+from repro.serving.orchestrator import Orchestrator
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GBPS = 1e9 / 8
+
+
+def k(i: int) -> bytes:
+    return bytes([i]) * 16
+
+
+# ---------------------------------------------------------------------------
+# Eviction policies
+# ---------------------------------------------------------------------------
+class TestPolicies:
+    def test_lru_victim_order(self):
+        p = LRUPolicy()
+        for i in range(3):
+            p.add(k(i), 1, now=float(i))
+        p.touch(k(0), now=5.0)  # 0 becomes most recent
+        assert p.pop_victim(6.0) == k(1)
+        assert p.pop_victim(6.0) == k(2)
+        assert p.pop_victim(6.0) == k(0)
+        assert p.pop_victim(6.0) is None
+
+    def test_lfu_frequency_beats_recency(self):
+        p = LFUPolicy()
+        p.add(k(0), 1, now=0.0)
+        p.add(k(1), 1, now=1.0)
+        for _ in range(3):
+            p.touch(k(0), now=2.0)
+        # k1 is more recent in LRU terms but colder in frequency
+        assert p.pop_victim(3.0) == k(1)
+        assert p.pop_victim(3.0) == k(0)
+
+    def test_lfu_min_freq_recovers_after_removals(self):
+        p = LFUPolicy()
+        p.add(k(0), 1, now=0.0)
+        p.touch(k(0), now=1.0)
+        p.add(k(1), 1, now=2.0)
+        assert p.remove(k(1))  # empties the freq-1 bucket
+        assert p.pop_victim(3.0) == k(0)  # must advance past the hole
+
+    def test_ttl_expiry_and_refresh(self):
+        p = TTLPolicy(ttl_s=10.0)
+        p.add(k(0), 1, now=0.0)
+        p.add(k(1), 1, now=0.0)
+        p.touch(k(0), now=8.0)  # refresh pushes the deadline out
+        assert p.expired(11.0) == [k(1)]
+        assert p.expired(11.0) == []  # drained
+        assert p.expired(19.0) == [k(0)]
+
+    def test_gdsf_prefers_evicting_large_cold_objects(self):
+        p = GDSFPolicy()
+        p.add(k(0), 1000, now=0.0, hits=1)  # large, one hit
+        p.add(k(1), 10, now=0.0, hits=1)  # small, one hit
+        assert p.pop_victim(1.0) == k(0)
+
+    def test_gdsf_frequency_raises_priority(self):
+        p = GDSFPolicy()
+        p.add(k(0), 100, now=0.0)
+        p.add(k(1), 100, now=0.0)
+        for _ in range(5):
+            p.touch(k(1), now=1.0)
+        assert p.pop_victim(2.0) == k(0)
+
+    def test_gdsf_aging_clock_lets_new_objects_compete(self):
+        p = GDSFPolicy()
+        p.add(k(0), 1, now=0.0)
+        for _ in range(50):
+            p.touch(k(0), now=0.0)
+        assert p.pop_victim(0.0) is not None  # clock jumps to victim prio
+        p.add(k(1), 1, now=1.0)  # enters at the aged clock, not at zero
+        p.add(k(2), 1, now=1.0)
+        assert p.pop_victim(1.0) in (k(1), k(2))
+
+    def test_membership_and_remove(self):
+        for p in (LRUPolicy(), LFUPolicy(), TTLPolicy(5.0), GDSFPolicy()):
+            p.add(k(0), 1, now=0.0)
+            assert k(0) in p and len(p) == 1
+            assert p.remove(k(0)) and not p.remove(k(0))
+            assert k(0) not in p and len(p) == 0
+            assert p.pop_victim(1.0) is None
+
+    def test_make_policy_specs(self):
+        assert isinstance(make_policy("lru"), LRUPolicy)
+        assert isinstance(make_policy("lfu"), LFUPolicy)
+        assert isinstance(make_policy("gdsf"), GDSFPolicy)
+        ttl = make_policy("ttl/2.5")
+        assert isinstance(ttl, TTLPolicy) and ttl.ttl_s == 2.5
+        with pytest.raises(ValueError):
+            make_policy("arc")
+
+
+# ---------------------------------------------------------------------------
+# Radix eviction: the leak fix + policy plumbing
+# ---------------------------------------------------------------------------
+def _chain_tokens(n_chunks: int, g: int = 4, seed: int = 0) -> list[int]:
+    rng = random.Random(seed)
+    return [rng.randrange(1000) for _ in range(n_chunks * g)]
+
+
+class TestRadixEviction:
+    def test_on_evict_surfaces_every_evicted_key(self):
+        evicted = []
+        idx = RadixIndex(4, max_chunks=2, on_evict=evicted.append)
+        keys = chunk_keys(_chain_tokens(4), 4)
+        idx.insert_keys(keys[:1])
+        idx.insert_keys(chunk_keys(_chain_tokens(1, seed=1), 4))
+        idx.insert_keys(chunk_keys(_chain_tokens(1, seed=2), 4))
+        assert len(idx) == 2
+        assert idx.evictions == 1 and len(evicted) == 1
+        assert evicted[0] not in idx._nodes
+
+    def test_evicted_objects_deleted_from_store_exactly_once(self):
+        store = InMemoryStore()
+        deletes = []
+
+        def on_evict(key):
+            deletes.append(key)
+            store.delete(key)
+
+        idx = RadixIndex(4, max_chunks=3, on_evict=on_evict)
+        for seed in range(8):
+            keys = chunk_keys(_chain_tokens(2, seed=seed), 4)
+            for key in idx.insert_keys(keys):
+                if idx.contains(key):  # not self-evicted within the burst
+                    store.put(key, b"x")
+        # coherence: the store holds exactly the indexed keys, and every
+        # delete was for a distinct key (no double delete)
+        assert len(deletes) == len(set(deletes))
+        assert store.stats.deletes == len(deletes)
+        assert {key for key in idx._nodes} == set(store._data)
+        assert len(idx) <= 3
+
+    def test_pinned_leaves_are_never_evicted(self):
+        idx = RadixIndex(4, max_chunks=1)
+        pinned = chunk_keys(_chain_tokens(1, seed=0), 4)
+        idx.insert_keys(pinned)
+        idx.pin(pinned)
+        other = chunk_keys(_chain_tokens(1, seed=1), 4)
+        idx.insert_keys(other)
+        # over budget but the only other resident is pinned: the new leaf is
+        # the sole evictable node and gets evicted
+        assert idx.contains(pinned[0])
+        assert len(idx) == 1
+
+    def test_unpin_restores_evictability(self):
+        idx = RadixIndex(4, max_chunks=1)
+        keys = chunk_keys(_chain_tokens(1, seed=0), 4)
+        idx.insert_keys(keys)
+        idx.pin(keys)
+        idx.unpin(keys)
+        idx.insert_keys(chunk_keys(_chain_tokens(1, seed=1), 4))
+        assert len(idx) == 1
+        assert not idx.contains(keys[0])  # LRU: the older unpinned leaf went
+
+    def test_internal_nodes_evict_only_once_leaf(self):
+        evicted = []
+        idx = RadixIndex(4, max_chunks=2, on_evict=evicted.append)
+        keys = chunk_keys(_chain_tokens(3, seed=0), 4)
+        idx.insert_keys(keys)  # chain of 3: two internal + leaf
+        # only the tail leaf was evictable; evicting it frees its parent
+        # into the evictable set, but the budget already holds
+        assert len(idx) == 2
+        assert evicted == [keys[2]]
+        assert idx.contains(keys[0]) and idx.contains(keys[1])
+        assert idx.stats()["evictable"] == 1
+
+    def test_eviction_cascades_up_freed_parents(self):
+        evicted = []
+        idx = RadixIndex(4, max_chunks=1, on_evict=evicted.append)
+        idx.insert_keys(chunk_keys(_chain_tokens(4, seed=0), 4))
+        # budget 1: the whole spine above the leaf unwinds leaf-first
+        assert len(idx) == 1
+        assert len(evicted) == 3
+
+    def test_match_refreshes_recency(self):
+        idx = RadixIndex(4, max_chunks=2)
+        a = chunk_keys(_chain_tokens(1, seed=0), 4)
+        b = chunk_keys(_chain_tokens(1, seed=1), 4)
+        idx.insert_keys(a)
+        idx.insert_keys(b)
+        idx.match_keys(a)  # a becomes most recent
+        idx.insert_keys(chunk_keys(_chain_tokens(1, seed=2), 4))
+        assert idx.contains(a[0]) and not idx.contains(b[0])
+
+    def test_peek_match_does_not_refresh(self):
+        idx = RadixIndex(4, max_chunks=2)
+        a = chunk_keys(_chain_tokens(1, seed=0), 4)
+        b = chunk_keys(_chain_tokens(1, seed=1), 4)
+        idx.insert_keys(a)
+        idx.insert_keys(b)
+        idx.match_keys(a, touch=False)  # scoring peek: no recency update
+        idx.insert_keys(chunk_keys(_chain_tokens(1, seed=2), 4))
+        assert not idx.contains(a[0]) and idx.contains(b[0])
+
+    def test_ttl_sweep_fires_on_evict(self):
+        t = [0.0]
+        evicted = []
+        idx = RadixIndex(4, clock=lambda: t[0], policy=TTLPolicy(10.0),
+                         on_evict=evicted.append)
+        keys = chunk_keys(_chain_tokens(1, seed=0), 4)
+        idx.insert_keys(keys)
+        t[0] = 5.0
+        assert idx.sweep_expired() == []
+        t[0] = 11.0
+        assert idx.sweep_expired() == keys
+        assert evicted == keys and len(idx) == 0
+
+    def test_gdsf_size_aware_eviction(self):
+        idx = RadixIndex(4, max_chunks=2, policy=GDSFPolicy(),
+                         chunk_bytes=1000)
+        hot = chunk_keys(_chain_tokens(1, seed=0), 4)
+        idx.insert_keys(hot)
+        for _ in range(5):
+            idx.match_keys(hot)
+        cold = chunk_keys(_chain_tokens(1, seed=1), 4)
+        idx.insert_keys(cold)
+        idx.insert_keys(chunk_keys(_chain_tokens(1, seed=2), 4))
+        assert idx.contains(hot[0]) and not idx.contains(cold[0])
+
+
+class TestRadixStoreCoherenceConcurrent:
+    def test_concurrent_match_insert_pin_with_eviction(self):
+        """The tentpole coherence contract under concurrency: pinned nodes
+        survive, and every evicted key is deleted from the backing store
+        exactly once — the final store contents equal the index contents."""
+        store = InMemoryStore()
+        delete_counts: dict[bytes, int] = {}
+        lock = threading.Lock()
+
+        def on_evict(key):
+            with lock:
+                delete_counts[key] = delete_counts.get(key, 0) + 1
+            store.delete(key)
+
+        idx = RadixIndex(4, max_chunks=16, on_evict=on_evict)
+        pinned = chunk_keys(_chain_tokens(4, seed=999), 4)
+        idx.insert_keys(pinned)
+        for key in pinned:
+            store.put(key, b"p")
+        idx.pin(pinned)
+        errors = []
+
+        def writer(wid):
+            try:
+                for i in range(40):
+                    keys = chunk_keys(
+                        _chain_tokens(2, seed=wid * 1000 + i), 4)
+                    for key in idx.insert_keys(keys):
+                        if idx.contains(key):
+                            store.put(key, b"x")
+                    idx.match_keys(keys)
+            except Exception as exc:  # pragma: no cover
+                errors.append(exc)
+
+        def pinner():
+            try:
+                for _ in range(100):
+                    idx.pin(pinned)
+                    idx.match_keys(pinned)
+                    idx.unpin(pinned)
+            except Exception as exc:  # pragma: no cover
+                errors.append(exc)
+
+        threads = [threading.Thread(target=writer, args=(w,))
+                   for w in range(4)] + [threading.Thread(target=pinner)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errors
+        # pinned chain survived every eviction storm
+        for key in pinned:
+            assert idx.contains(key)
+        # no key was deleted twice
+        assert all(c == 1 for c in delete_counts.values()), delete_counts
+        # store == index (coherence), and the budget held
+        assert set(store._data) == set(idx._nodes)
+        assert len(idx) <= 16
+
+
+# ---------------------------------------------------------------------------
+# TieredStore hot tier under pluggable policies
+# ---------------------------------------------------------------------------
+class TestTieredStorePolicies:
+    def _tiered(self, capacity=4, policy=None):
+        t = [0.0]
+        ts = TieredStore(InMemoryStore(), hot_capacity_bytes=capacity,
+                         hot_policy=policy, clock=lambda: t[0])
+        return ts, t
+
+    def test_hot_occupancy_never_exceeds_capacity(self):
+        ts, _ = self._tiered(capacity=4)
+        for i in range(8):
+            ts.put(k(i), b"ab")
+        snap = ts.tier_snapshot()
+        assert snap["hot"]["resident_bytes"] <= 4
+        assert snap["hot"]["evictions"] == 6
+
+    def test_promotion_interacts_with_policy(self):
+        """A get from cold promotes into the hot tier and must evict per the
+        policy — LRU: the least-recently-touched resident goes."""
+        ts, t = self._tiered(capacity=4)
+        ts.put(k(0), b"ab")
+        t[0] = 1.0
+        ts.put(k(1), b"cd")
+        t[0] = 2.0
+        ts.get(k(0))  # refresh k0
+        t[0] = 3.0
+        ts.put(k(4), b"ef")  # must evict k1 (LRU), not k0
+        hot = ts._hot
+        assert k(0) in hot and k(4) in hot and k(1) not in hot
+
+    def test_lfu_hot_tier_keeps_frequent_object(self):
+        ts, t = self._tiered(capacity=4, policy=LFUPolicy())
+        ts.put(k(0), b"ab")
+        ts.put(k(1), b"cd")
+        for i in range(3):
+            t[0] = float(i)
+            ts.get(k(1))
+        ts.put(k(2), b"ef")  # LFU evicts k0 even though k1 is older
+        assert k(1) in ts._hot and k(0) not in ts._hot
+
+    def test_delete_removes_from_policy_and_counts(self):
+        ts, _ = self._tiered(capacity=4)
+        ts.put(k(0), b"ab")
+        ts.delete(k(0))
+        assert k(0) not in ts._hot
+        assert ts.stats.deletes == 1
+        ts.put(k(1), b"cd")
+        ts.put(k(2), b"ef")  # fits: the deleted resident freed its bytes
+        assert ts.tier_snapshot()["hot"]["resident_bytes"] <= 4
+
+    def test_cold_demotion_still_readable(self):
+        ts, _ = self._tiered(capacity=2)
+        ts.put(k(0), b"ab")
+        ts.put(k(1), b"cd")  # evicts k0 from hot
+        assert ts.get(k(0)) == b"ab"  # cold tier serves it
+
+
+# ---------------------------------------------------------------------------
+# Serving-layer coherence: orchestrator deletes evicted objects
+# ---------------------------------------------------------------------------
+class TestOrchestratorEvictionCoherence:
+    def test_index_eviction_deletes_gateway_objects(self):
+        store = InMemoryStore()
+        gw = Gateway(store)
+        spec = KVSpec(num_layers=2, chunk_tokens=4, num_kv_heads=1,
+                      head_dim=8, dtype_bytes=2)
+        idx = RadixIndex(4, max_chunks=4)
+        orch = Orchestrator(idx, gw, spec)
+        assert idx.on_evict is not None  # installed by the orchestrator
+        for seed in range(6):
+            tokens = _chain_tokens(2, seed=seed)
+            keys = chunk_keys(tokens, 4)
+            orch.commit(tokens, {key: b"obj" for key in keys})
+        # every object in the store is still indexed: eviction deleted the rest
+        assert set(store._data) == set(idx._nodes)
+        assert orch.stats["evicted_objects"] == store.stats.deletes
+        assert orch.stats["evicted_objects"] > 0
+        assert len(idx) <= 4
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+class TestWorkloads:
+    def test_deterministic_and_seed_sensitive(self):
+        a = zipf_system_prompt_trace(50, 10.0, seed=3)
+        b = zipf_system_prompt_trace(50, 10.0, seed=3)
+        c = zipf_system_prompt_trace(50, 10.0, seed=4)
+        assert a == b
+        assert a != c
+
+    def test_zipf_skew_concentrates_popularity(self):
+        trace = zipf_system_prompt_trace(2000, 10.0, seed=0,
+                                         num_tenants=1,
+                                         prompts_per_tenant=16,
+                                         prompt_alpha=1.2)
+        counts: dict[str, int] = {}
+        for tr in trace:
+            counts[tr.prefix_id] = counts.get(tr.prefix_id, 0) + 1
+        top = max(counts.values())
+        assert top / len(trace) > 2.0 / 16  # far above the uniform share
+
+    def test_rag_prefixes_are_cross_tenant(self):
+        trace = rag_trace(500, 10.0, seed=1, num_docs=8, doc_alpha=1.0)
+        tenants_per_doc: dict[str, set] = {}
+        for tr in trace:
+            tenants_per_doc.setdefault(tr.prefix_id, set()).add(tr.tenant)
+        assert max(len(ts) for ts in tenants_per_doc.values()) > 1
+
+    def test_churn_rotates_working_set(self):
+        trace = tenant_churn_trace(600, 20.0, cohort=4, cohort_life_s=5.0,
+                                   overlap=0, seed=0)
+        early = {tr.tenant for tr in trace if tr.arrival_s < 4.0}
+        late = {tr.tenant for tr in trace if tr.arrival_s > 25.0}
+        assert early and late and not (early & late)
+
+    def test_trace_v2_roundtrip(self, tmp_path):
+        trace = zipf_system_prompt_trace(20, 10.0, seed=5)
+        path = str(tmp_path / "t.json")
+        save_trace(path, trace)
+        loaded = load_trace(path)
+        assert loaded == sorted(trace,
+                                key=lambda r: (r.arrival_s, r.req_id))
+
+    def test_v1_trace_still_loads(self):
+        trace = load_trace(os.path.join(DATA, "golden_trace.json"))
+        assert trace and all(tr.tenant == "" and tr.hot_tokens == 0
+                             for tr in trace)
+
+    def test_working_set_chunks(self):
+        trace = [TraceRequest("a", 0.0, 256, 0.5, 64, prefix_id="p"),
+                 TraceRequest("b", 1.0, 256, 0.5, 64, prefix_id="p"),
+                 TraceRequest("c", 2.0, 256, 0.5, 64, prefix_id="q")]
+        assert working_set_chunks(trace) == 4  # 2 prefixes x 2 chunks
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+class _StubNode:
+    def __init__(self, inflight=0, cache=None):
+        self.inflight = inflight
+        self.cache = cache
+
+
+class _StubCache:
+    def __init__(self, score):
+        self._score = score
+
+    def peek_chunks(self, chain):
+        return self._score
+
+
+def _req(prefix="p0"):
+    return TraceRequest("r0", 0.0, 256, 0.5, 64, prefix_id=prefix)
+
+
+class TestRouting:
+    def test_random_is_seed_deterministic(self):
+        nodes = [_StubNode() for _ in range(4)]
+        a = [RandomRouter(seed=1).route(_req(), nodes, []) for _ in range(1)]
+        b = [RandomRouter(seed=1).route(_req(), nodes, []) for _ in range(1)]
+        assert a == b
+
+    def test_round_robin_cycles(self):
+        r = RoundRobinRouter()
+        nodes = [_StubNode() for _ in range(3)]
+        assert [r.route(_req(), nodes, []) for _ in range(6)] == [
+            0, 1, 2, 0, 1, 2]
+
+    def test_consistent_hash_is_prefix_stable(self):
+        r = ConsistentHashRouter()
+        nodes = [_StubNode() for _ in range(5)]
+        picks = {r.route(_req("doc7"), nodes, []) for _ in range(10)}
+        assert len(picks) == 1
+        assert r.route(_req("doc8"), nodes, []) in range(5)
+
+    def test_consistent_hash_remaps_minimally(self):
+        r = ConsistentHashRouter(virtual=128)
+        five = [_StubNode() for _ in range(5)]
+        six = [_StubNode() for _ in range(6)]
+        moved = 0
+        n = 200
+        for i in range(n):
+            a = r.route(_req(f"doc{i}"), five, [])
+            b = r.route(_req(f"doc{i}"), six, [])
+            moved += a != b
+        assert moved / n < 0.45  # naive mod-N rehash moves ~5/6
+
+    def test_affinity_prefers_warmest_node(self):
+        nodes = [_StubNode(cache=_StubCache(0)),
+                 _StubNode(cache=_StubCache(5)),
+                 _StubNode(cache=_StubCache(2))]
+        assert AffinityRouter().route(_req(), nodes, []) == 1
+
+    def test_affinity_sheds_under_imbalance(self):
+        r = AffinityRouter(max_imbalance=4)
+        nodes = [_StubNode(inflight=6, cache=_StubCache(5)),
+                 _StubNode(inflight=1, cache=_StubCache(0))]
+        assert r.route(_req(), nodes, []) == 1
+        assert r.shed == 1
+
+    def test_affinity_ties_break_to_least_loaded(self):
+        nodes = [_StubNode(inflight=3, cache=_StubCache(0)),
+                 _StubNode(inflight=1, cache=_StubCache(0))]
+        assert AffinityRouter().route(_req(), nodes, []) == 1
+
+    def test_make_router(self):
+        for spec, cls in (("random", RandomRouter),
+                          ("round_robin", RoundRobinRouter),
+                          ("hash", ConsistentHashRouter),
+                          ("affinity", AffinityRouter)):
+            assert isinstance(make_router(spec), cls)
+        with pytest.raises(ValueError):
+            make_router("sticky")
+
+
+# ---------------------------------------------------------------------------
+# Chain derivation
+# ---------------------------------------------------------------------------
+class TestChains:
+    def test_shared_prefix_same_keys_unique_suffix(self):
+        a = TraceRequest("a", 0.0, 512, 0.5, 64, prefix_id="p")
+        b = TraceRequest("b", 1.0, 512, 0.5, 64, prefix_id="p")
+        ca, cb = request_chain(a), request_chain(b)
+        assert len(ca) == len(cb) == 8
+        assert ca[:4] == cb[:4]  # shared prefix dedups
+        assert not set(ca[4:]) & set(cb[4:])  # suffixes are disjoint
+
+    def test_prefix_memoisation(self):
+        memo = {}
+        a = request_chain(TraceRequest("a", 0.0, 512, 0.5, 64,
+                                       prefix_id="p"), memo)
+        b = request_chain(TraceRequest("b", 0.0, 512, 0.5, 64,
+                                       prefix_id="p"), memo)
+        assert a[:4] == b[:4] and ("p", 4) in memo
+
+    def test_no_prefix_id_means_private_chain(self):
+        a = request_chain(TraceRequest("a", 0.0, 512, 0.5, 64))
+        b = request_chain(TraceRequest("b", 0.0, 512, 0.5, 64))
+        assert not set(a) & set(b)
+
+    def test_derive_chain_is_deterministic(self):
+        assert derive_chain(GENESIS, "x", 5) == derive_chain(GENESIS, "x", 5)
+        assert derive_chain(GENESIS, "x", 5) != derive_chain(GENESIS, "y", 5)
+
+
+# ---------------------------------------------------------------------------
+# Fleet simulator
+# ---------------------------------------------------------------------------
+class TestFleetConformance:
+    def test_single_node_random_matches_cluster_sim(self):
+        trace = poisson_trace(60, rate_rps=6.0, seed=11)
+        ref = ClusterSim(cap_bps=40 * GBPS, max_flows=8).run(trace)
+        res = FleetSim(1, make_router("random"), cap_bps=40 * GBPS,
+                       max_flows=8).run(trace)
+        ra, rb = ref.by_id(), res.by_id()
+        assert set(ra) == set(rb)
+        for rid in ra:
+            for field in ("admit_s", "flow_done_s", "prefill_done_s",
+                          "bytes_total"):
+                assert getattr(rb[rid], field) == pytest.approx(
+                    getattr(ra[rid], field), abs=1e-9), (rid, field)
+        assert all(r.node == 0 for r in res.records)
+
+    def test_single_node_closed_loop_matches(self):
+        trace_args = dict(clients=6, think_s=0.05, requests_per_client=4,
+                          seed=2)
+        ref = ClusterSim(cap_bps=40 * GBPS).run(ClosedLoopTrace(**trace_args))
+        res = FleetSim(1, make_router("random"),
+                       cap_bps=40 * GBPS).run(ClosedLoopTrace(**trace_args))
+        ra, rb = ref.by_id(), res.by_id()
+        assert set(ra) == set(rb)
+        for rid in ra:
+            assert rb[rid].ttft_s == pytest.approx(ra[rid].ttft_s, abs=1e-9)
+
+    def test_epoch_mode_rejected(self):
+        with pytest.raises(ValueError):
+            FleetSim(2, make_router("random"), epoch_s=0.1)
+
+    def test_chunk_tokens_mismatch_rejected(self):
+        sim = FleetSim(1, make_router("random"),
+                       cache=CacheConfig(hot_capacity_bytes=1 << 30,
+                                         chunk_tokens=64))
+        bad = [TraceRequest("r0", 0.0, 4096, 0.5, chunk_tokens=32)]
+        with pytest.raises(ValueError):
+            sim.run(bad)
+
+
+def _small_fleet(nodes=2, router="affinity", capacity=None, policy="lru",
+                 **kw):
+    cap = capacity if capacity is not None else 4 * 1024 ** 3
+    return FleetSim(nodes, make_router(router, seed=7),
+                    cache=CacheConfig(hot_capacity_bytes=cap, policy=policy),
+                    cap_bps=20 * GBPS, max_flows=8, **kw)
+
+
+def _small_trace(n=80, seed=1):
+    return zipf_system_prompt_trace(n, rate_rps=40.0, seed=seed,
+                                    num_tenants=6, prompts_per_tenant=3,
+                                    prompt_tokens=2048, context=4096)
+
+
+class TestFleetCacheMode:
+    def test_hit_rates_warm_up_over_time(self):
+        res = _small_fleet().run(_small_trace())
+        first = [r for r in res.records[:10]]
+        last = [r for r in res.records[-30:]]
+        assert sum(r.hit_rate for r in last) / 30 \
+            > sum(r.hit_rate for r in first) / 10
+        # the very first arrival finds a cold namespace
+        assert res.records[0].hit_rate == 0.0
+
+    def test_hot_tokens_bounded_by_cached_tokens(self):
+        res = _small_fleet().run(_small_trace())
+        for r in res.records:
+            assert 0 <= r.hot_tokens <= r.cached_tokens
+
+    def test_occupancy_within_capacity(self):
+        cap = 256 * 1024 ** 2  # tight: forces sustained eviction
+        res = _small_fleet(capacity=cap).run(_small_trace(n=120))
+        for st in res.node_stats:
+            c = st["cache"]
+            assert c["resident_bytes"] <= cap
+            assert c["peak_bytes"] <= cap
+            assert c["index"]["evictions"] > 0
+
+    def test_store_index_coherence_after_run(self):
+        sim = _small_fleet(capacity=256 * 1024 ** 2)
+        sim.run(_small_trace(n=120))
+        for node in sim.nodes:
+            cache = node.cache
+            assert set(cache.store._sizes) == set(cache.index._nodes)
+
+    def test_affinity_beats_random_under_zipf(self):
+        trace = _small_trace(n=100)
+        aff = _small_fleet(router="affinity").run(trace).metrics()
+        rnd = _small_fleet(router="random").run(trace).metrics()
+        assert aff.hot_token_rate > rnd.hot_token_rate
+        assert aff.egress_bytes < rnd.egress_bytes
+
+    def test_records_carry_node_and_tenant(self):
+        res = _small_fleet().run(_small_trace())
+        assert {r.node for r in res.records} <= {0, 1}
+        assert all(r.tenant.startswith("t") for r in res.records)
+
+    def test_per_tenant_rollup(self):
+        res = _small_fleet().run(_small_trace())
+        byt = res.per_tenant()
+        assert set(byt) == {r.tenant for r in res.records}
+        assert sum(m.n for m in byt.values()) == len(res.records)
+
+    def test_node_stats_rollup(self):
+        res = _small_fleet().run(_small_trace())
+        m = res.metrics()
+        assert sum(st["egress_bytes"] for st in res.node_stats) \
+            == pytest.approx(m.egress_bytes, abs=1e-6)
+        assert sum(st["hot_tokens"] for st in res.node_stats) == m.hot_tokens
+        assert res.global_chunks > 0 and res.global_bytes > 0
+
+    def test_ledger_store_is_control_plane_only(self):
+        s = ByteLedgerStore()
+        s.put(k(0), b"abc")
+        s.put(k(0), b"abc")
+        assert s.stats.puts == 1 and s.stats.dedup_hits == 1
+        assert s.total_bytes() == 3 and s.contains(k(0))
+        with pytest.raises(TypeError):
+            s.get(k(0))
+        s.delete(k(0))
+        assert s.stats.deletes == 1 and len(s) == 0
+
+    def test_injectable_real_store(self):
+        cfg = CacheConfig(hot_capacity_bytes=1 << 30,
+                          store_factory=InMemoryStore)
+        sim = FleetSim(1, make_router("random"), cache=cfg,
+                       cap_bps=20 * GBPS)
+        res = sim.run(_small_trace(n=20))
+        node = sim.nodes[0]
+        assert set(node.cache.store._data) == set(node.cache.index._nodes)
+        assert res.metrics().n == 20
+
+
+# ---------------------------------------------------------------------------
+# Metrics regressions
+# ---------------------------------------------------------------------------
+class TestMetricsRegressions:
+    def test_goodput_nan_for_single_request(self):
+        rec = RequestRecord("r0", 4096, 0.5, arrival_s=0.0)
+        rec.prefill_done_s = 0.0  # zero-makespan degenerate case
+        m = summarize([rec])
+        assert math.isnan(m.goodput_rps)  # was inf: poisoned ratios silently
+
+    def test_goodput_defined_for_two_requests(self):
+        recs = []
+        for i in range(2):
+            r = RequestRecord(f"r{i}", 4096, 0.5, arrival_s=float(i))
+            r.prefill_done_s = float(i) + 1.0
+            recs.append(r)
+        assert summarize(recs).goodput_rps == pytest.approx(1.0)
+
+    def test_per_tenant_partitions_records(self):
+        recs = []
+        for i, tenant in enumerate(["a", "a", "b"]):
+            r = RequestRecord(f"r{i}", 4096, 0.5, arrival_s=0.0,
+                              tenant=tenant)
+            r.prefill_done_s = 1.0
+            recs.append(r)
+        byt = per_tenant(recs)
+        assert byt["a"].n == 2 and byt["b"].n == 1
+
+
+# ---------------------------------------------------------------------------
+# Golden fleet trace (committed fixture, bit-identical replay)
+# ---------------------------------------------------------------------------
+class TestGoldenFleetTrace:
+    def _run(self):
+        trace = load_trace(os.path.join(DATA, "golden_trace_fleet.json"))
+        sim = FleetSim(2, make_router("affinity"),
+                       cache=CacheConfig(hot_capacity_bytes=2 * 1024 ** 3,
+                                         policy="lru"),
+                       cap_bps=20 * GBPS, max_flows=8)
+        return sim.run(trace)
+
+    def test_replay_matches_committed_table(self):
+        with open(os.path.join(DATA,
+                               "golden_trace_fleet_expected.json")) as f:
+            expected = json.load(f)
+        res = self._run()
+        got = res.by_id()
+        assert len(got) == len(expected["requests"])
+        for rowx in expected["requests"]:
+            r = got[rowx["req_id"]]
+            assert r.node == rowx["node"], rowx["req_id"]
+            assert r.hot_tokens == rowx["hot_tokens"], rowx["req_id"]
+            assert r.hit_rate == pytest.approx(rowx["hit_rate"], abs=1e-12)
+            assert r.ttft_s == pytest.approx(rowx["ttft_s"], abs=1e-9)
+        assert res.global_chunks == expected["global_chunks"]
+        assert res.shed == expected["shed"]
+
+    def test_same_trace_is_bit_identical(self):
+        a, b = self._run(), self._run()
+        ra = [(r.req_id, r.node, r.hot_tokens, r.hit_rate, r.ttft_s,
+               r.bytes_total) for r in a.records]
+        rb = [(r.req_id, r.node, r.hot_tokens, r.hit_rate, r.ttft_s,
+               r.bytes_total) for r in b.records]
+        assert ra == rb  # exact equality, not approx
+        assert a.global_chunks == b.global_chunks
