@@ -10,6 +10,14 @@ bandwidth pool over time.  Reported per (load, policy):
   ratio, which must stay inside/above the paper's 1.2-1.8x static window.
 
 Run standalone:  PYTHONPATH=src python benchmarks/bench_cluster.py [--smoke]
+                 [--trace PATH]
+
+``--trace PATH`` additionally replays the smoke workload once under
+CAL_STALL_OPT with a tracer attached and writes the span timeline as
+Perfetto-loadable Chrome trace JSON (validated before writing).  The traced
+replay is a separate run *after* the timed rows — attaching a tracer never
+perturbs the benchmark numbers (the sim's zero-perturbation contract,
+DESIGN.md §Observability).
 """
 from __future__ import annotations
 
@@ -83,11 +91,33 @@ def run(smoke: bool = False) -> list[str]:
     return rows
 
 
+def export_trace(path: str, n: int = 16, rate_rps: float = 1.0,
+                 seed: int = 0) -> None:
+    """One traced CAL_STALL_OPT replay -> validated Chrome trace JSON."""
+    from repro.obs import Tracer, assert_valid_chrome_trace, write_chrome_trace
+
+    tracer = Tracer()
+    sim = ClusterSim(cap_bps=CAP_BPS, policy=Policy.CAL_STALL_OPT,
+                     margin_bps=PAPER_MARGIN_BPS, tracer=tracer)
+    sim.run(poisson_trace(n, rate_rps, seed=seed))
+    assert_valid_chrome_trace(write_chrome_trace(tracer, path))
+    print(f"# trace: {len(tracer)} events -> {path}", flush=True)
+
+
 def main(argv: list[str]) -> int:
     smoke = "--smoke" in argv
+    trace_path = None
+    if "--trace" in argv:
+        i = argv.index("--trace")
+        if i + 1 >= len(argv):
+            print("--trace requires a PATH argument", file=sys.stderr)
+            return 2
+        trace_path = argv[i + 1]
     print("name,us_per_call,derived")
     for line in run(smoke=smoke):
         print(line, flush=True)
+    if trace_path is not None:
+        export_trace(trace_path)
     return 0
 
 

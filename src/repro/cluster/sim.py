@@ -89,6 +89,10 @@ class _ActiveFlow:
     # Eq. 3 recurrences
     ready_prev: float = _NEG_INF
     finish_prev: float = _NEG_INF
+    # observability helpers (also consumed by the TTFT-attribution summary)
+    n_chunks: int = 0
+    per_layer: Optional[list[float]] = None  # exact per-layer wire bytes
+    wire_from: float = 0.0  # when the wire started serving the next layer
 
     def next_threshold(self) -> float:
         if self.chunkwise:
@@ -132,7 +136,9 @@ class ClusterSim:
                  replanner=None,
                  max_flows: Optional[int] = None,
                  epoch_s: Optional[float] = None,
-                 codec: str = "identity") -> None:
+                 codec: str = "identity",
+                 tracer=None,
+                 track_prefix: str = "") -> None:
         if mode not in ("layerwise", "chunkwise"):
             raise ValueError(f"unknown mode {mode!r}")
         self.compute = compute or PaperComputeModel()
@@ -145,12 +151,26 @@ class ClusterSim:
         self.epoch_s = epoch_s
         self.clock = VirtualClock()
         self._spec_arg = spec
+        # Observability (DESIGN.md §Observability): a nullable `obs.Tracer`.
+        # Every emission is guarded by `if tracer is not None` and stamped
+        # with event times the loop already computed — attaching a tracer can
+        # never perturb a simulated timestamp (the golden tests assert
+        # bit-identity).  `track_prefix` namespaces tracks per node so a
+        # fleet exports one process group per node ("n0/req-3").
+        self.tracer = tracer
+        self.track_prefix = track_prefix
         self.pool: Optional[BandwidthPool] = None
         if cap_bps is not None:
             self.pool = BandwidthPool(cap_bps, policy, margin_bps,
                                       replanner=replanner)
+            self.pool.tracer = tracer
+            self.pool.trace_track = track_prefix + "pool"
         if replanner is not None and hasattr(replanner, "clock"):
             replanner.clock = self.clock
+        if replanner is not None and hasattr(replanner, "tracer") \
+                and tracer is not None:
+            replanner.tracer = tracer
+            replanner.trace_track = track_prefix + "pool"
 
     def kv_spec(self, chunk_tokens: int) -> KVSpec:
         if self._spec_arg is not None:
@@ -216,12 +236,19 @@ class ClusterSim:
         return self.finish()
 
     # -- event handlers -------------------------------------------------------
+    def _trk(self, req_id: str) -> str:
+        return self.track_prefix + req_id
+
     def _on_arrive(self, ev: Event) -> None:
         tr: TraceRequest = ev.payload
         rec = RequestRecord(tr.req_id, tr.context, tr.hit_rate, tr.arrival_s,
                             tenant=tr.tenant, hot_tokens=tr.hot_tokens)
         self._records.append(rec)
         self._backlog.append(tr)
+        if self.tracer is not None:
+            self.tracer.instant(self._trk(tr.req_id), "arrive", t=ev.time,
+                                cat="cluster", context=tr.context,
+                                hit_rate=tr.hit_rate)
         if self.epoch_s is None:
             self._reallocate(ev.time)
         else:
@@ -252,6 +279,8 @@ class ClusterSim:
         if fl is None:
             return
         fl.record.prefill_done_s = ev.time
+        if self.tracer is not None:
+            self._emit_request_summary(fl, ev.time)
         if self.replanner is not None and hasattr(self.replanner, "unregister"):
             self.replanner.unregister(ev.req_id)
         if self._closed is not None:
@@ -259,6 +288,34 @@ class ClusterSim:
             if nxt is not None:
                 self._queue.push(Event(nxt.arrival_s, EventKind.ARRIVE,
                                        payload=nxt))
+
+    def _emit_request_summary(self, fl: _ActiveFlow, done: float) -> None:
+        """Close the request's track: a ``serve`` span plus the ``"request"``
+        summary instant that `obs.attribution.attribute_trace` consumes.
+        All values are event times the loop already computed — emission is
+        purely observational."""
+        rec = fl.record
+        trk = self._trk(rec.req_id)
+        self.tracer.span_at(trk, "serve", rec.admit_s, done, cat="cluster")
+        if fl.total_bytes <= 0.0:
+            mode = "recompute"
+        elif fl.chunkwise:
+            mode = "chunkwise"
+        else:
+            mode = "layerwise"
+        per_layer = (list(fl.per_layer) if fl.per_layer is not None
+                     else [fl.layer_bytes] * fl.num_layers)
+        self.tracer.instant(
+            trk, "request", t=done, cat="cluster",
+            req_id=rec.req_id, mode=mode,
+            arrival_s=rec.arrival_s, admit_s=rec.admit_s,
+            prefill_done_s=done, flow_done_s=rec.flow_done_s,
+            num_layers=fl.num_layers, layer_compute_s=fl.c,
+            per_layer_bytes=per_layer, n_objects=fl.n_chunks,
+            avail_rel=([a - rec.admit_s for a in fl.avail]
+                       if fl.avail else None),
+            pre_s=fl.pre_s, c_total=fl.c_total,
+            replanned=rec.replanned)
 
     def _on_realloc(self, ev: Event) -> None:
         self._realloc_scheduled_t = None
@@ -348,6 +405,9 @@ class ClusterSim:
         rec.layer_compute_s = fr.layer_compute_s
         rec.bytes_total = layer_bytes * L
         rec.replanned = fr.bytes_per_layer != nominal.bytes_per_layer
+        if self.tracer is not None and now > tr.arrival_s:
+            self.tracer.span_at(self._trk(tr.req_id), "queue",
+                                tr.arrival_s, now, cat="cluster")
 
         fl = _ActiveFlow(
             tr=tr, record=rec, fr=fr, chunkwise=(self.mode == "chunkwise"),
@@ -356,6 +416,7 @@ class ClusterSim:
             c_total=fr.layer_compute_s * L, pre_s=0.0,
             t_update=now, alloc_rate=rate,
             phys_rate=self.profile.effective_wire_rate(rate))
+        fl.n_chunks = n_chunks
         self._active[tr.req_id] = fl
 
         if layer_bytes <= 0.0:
@@ -363,6 +424,9 @@ class ClusterSim:
             # the T(0) endpoint of the planner, L*c after admission.
             fl.wire_done = True
             fl.pre_s = 0.0
+            if self.tracer is not None:
+                self.tracer.span_at(self._trk(tr.req_id), "compute",
+                                    now, now + L * fl.c, cat="compute")
             self._queue.push(Event(now, EventKind.FLOW_DONE, tr.req_id))
             self._queue.push(Event(now + L * fl.c, EventKind.PREFILL_DONE,
                                    tr.req_id))
@@ -386,8 +450,10 @@ class ClusterSim:
                 thr.append(cum)
             fl.thresholds = thr
             fl.pre_s = avail_rel[0]
+            fl.per_layer = per_layer
             # the wire stage starts once layer 0 is assembled
             fl.t_update = fl.avail[0]
+        fl.wire_from = fl.t_update
         self._schedule_next_wire(fl)
 
     # -- fluid wire integration ----------------------------------------------
@@ -421,6 +487,14 @@ class ClusterSim:
         fid = fl.tr.req_id
         if fl.chunkwise:
             fl.wire_done = True
+            if self.tracer is not None:
+                trk = self._trk(fid)
+                self.tracer.span_at(trk, "wire", fl.wire_from, t, cat="wire",
+                                    bytes=fl.total_bytes)
+                self.tracer.span_at(trk, "fetch.pre", t, t + fl.pre_s,
+                                    cat="fetch")
+                self.tracer.span_at(trk, "compute", t + fl.pre_s,
+                                    t + fl.pre_s + fl.c_total, cat="compute")
             self._queue.push(Event(t, EventKind.FLOW_DONE, fid))
             self._queue.push(Event(t + fl.pre_s + fl.c_total,
                                    EventKind.PREFILL_DONE, fid))
@@ -428,6 +502,17 @@ class ClusterSim:
         l = fl.next_layer
         ready = t  # the clock was assembly-gated, so the crossing IS ready
         compute_start = max(ready, fl.finish_prev) if l > 0 else ready
+        if self.tracer is not None:
+            trk = self._trk(fid)
+            self.tracer.span_at(trk, "wire", fl.wire_from, t, cat="wire",
+                                layer=l, bytes=fl.per_layer[l])
+            if l > 0 and ready > fl.finish_prev:
+                # compute pipeline idles between finishing layer l-1 and
+                # layer l's payload crossing — the per-layer stall interval
+                self.tracer.span_at(trk, "stall", fl.finish_prev, ready,
+                                    cat="stall", layer=l)
+            self.tracer.span_at(trk, "compute", compute_start,
+                                compute_start + fl.c, cat="compute", layer=l)
         fl.ready_prev = ready
         fl.finish_prev = compute_start + fl.c
         self._queue.push(Event(ready, EventKind.LAYER_READY, fid, layer=l))
@@ -443,4 +528,5 @@ class ClusterSim:
             # wire before the storage pipeline assembled it)
             fl.t_update = max(t, compute_start, fl.avail[l + 1])
             fl.next_layer = l + 1
+            fl.wire_from = fl.t_update
             self._schedule_next_wire(fl)

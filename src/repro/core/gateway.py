@@ -64,12 +64,21 @@ class Gateway:
         self._servers = {path: StorageServer(store, prof)
                          for path, prof in self.profiles.items()}
         self.requests_served = 0
+        # nullable obs tracer (DESIGN.md §Observability): one instant per
+        # control-plane request, stamped by the tracer's own clock
+        self.tracer = None
+        self.trace_track = "gateway"
+
+    def _emit(self, name: str, **args) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(self.trace_track, name, cat="gateway", **args)
 
     # -- plain object ops (single-object request model) ----------------------
     def put(self, key: bytes, data: bytes, path: S3Path = S3Path.RDMA_DIRECT) -> Timing:
         prof = self.profiles[path]
         self.store.put(key, data)
         self.requests_served += 1
+        self._emit("put", path=path.value, bytes=len(data))
         # PUT cost symmetric to GET for our purposes.
         return prof.single_get(len(data))
 
@@ -78,12 +87,14 @@ class Gateway:
         the store, or index eviction silently leaks storage forever."""
         self.store.delete(key)
         self.requests_served += 1
+        self._emit("delete")
 
     def get(self, key: bytes, path: S3Path = S3Path.RDMA_DIRECT,
             rate_limit: Optional[float] = None) -> GetResult:
         prof = self.profiles[path]
         data = self.store.get(key)
         self.requests_served += 1
+        self._emit("get", path=path.value, bytes=len(data))
         return GetResult(data, prof.single_get(len(data), rate_limit))
 
     def range_get(self, key: bytes, offset: int, length: int,
@@ -110,6 +121,8 @@ class Gateway:
         """
         desc = Descriptor.from_wire(descriptor_wire)
         self.requests_served += 1
+        self._emit("objectcache_get", delivery=desc.delivery.name,
+                   chunks=len(desc.chunk_keys), rate_limit=rate_limit)
         if desc.delivery is Delivery.LAYERWISE:
             return self._servers[S3Path.RDMA_AGG].execute_layerwise(
                 desc, rate_limit, start_s)

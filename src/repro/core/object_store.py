@@ -194,6 +194,16 @@ class TieredStore(ObjectStore):
         self.hot_stats = StoreStats()  # reads served by the DRAM tier only
         self.hot_hits = 0
         self.hot_misses = 0
+        # nullable obs tracer (DESIGN.md §Observability): get/put/promote/
+        # evict instants stamped from the store's own injected clock, so a
+        # simulated deployment traces in sim time and a live one in wall time
+        self.tracer = None
+        self.trace_track = "store"
+
+    def _emit(self, name: str, **args) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(self.trace_track, name, t=self._clock(),
+                                cat="store", **args)
 
     def tier_snapshot(self) -> dict:
         """Per-tier read/write split (the aggregate ``stats`` can't say
@@ -223,6 +233,7 @@ class TieredStore(ObjectStore):
             self._hot[key] = data
             self._hot_bytes += len(data)
             self._policy.add(key, len(data), now)
+            self._emit("promote", bytes=len(data))
             while self._hot_bytes > self.hot_capacity:
                 victim = self._policy.pop_victim(now)
                 if victim is None:
@@ -230,6 +241,7 @@ class TieredStore(ObjectStore):
                 evicted = self._hot.pop(victim)
                 self._hot_bytes -= len(evicted)
                 self.hot_stats.add(evictions=1)
+                self._emit("evict", bytes=len(evicted))
 
     def put(self, key: bytes, data: bytes) -> None:
         with self._lock:  # atomic contains+put: racing writers of the same
@@ -240,6 +252,7 @@ class TieredStore(ObjectStore):
             self.stats.add(dedup_hits=1)
         else:
             self.stats.add(puts=1, bytes_written=len(data))
+        self._emit("put", bytes=len(data), dedup=dup)
         if self.populate_on_write:
             self._admit(key, bytes(data))
 
@@ -252,9 +265,11 @@ class TieredStore(ObjectStore):
                 self.hot_hits += 1
                 self.hot_stats.add(gets=1, bytes_read=len(hit))
                 self.stats.add(bytes_read=len(hit))
+                self._emit("get", tier="hot", bytes=len(hit))
                 return hit
             self.hot_misses += 1
         data = self.cold.get(key)
+        self._emit("get", tier="cold", bytes=len(data))
         self._admit(key, data)
         self.stats.add(bytes_read=len(data))
         return data
@@ -268,8 +283,10 @@ class TieredStore(ObjectStore):
                 self.hot_hits += 1
                 self.hot_stats.add(range_gets=1, bytes_read=length)
                 self.stats.add(bytes_read=length)
+                self._emit("get", tier="hot", bytes=length)
                 return hit[offset:offset + length]
             self.hot_misses += 1
+        self._emit("get", tier="cold", bytes=length)
         # Promote the *whole* object, not just the requested range: layerwise
         # retrieval issues L range reads against the same chunk, so serving
         # the miss from cold without admitting would defeat the hot tier for

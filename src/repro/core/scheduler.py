@@ -179,6 +179,12 @@ class BandwidthPool:
         self.epochs = 0
         self.reallocs = 0
         self.replans = 0
+        # Observability (DESIGN.md §Observability): a nullable `obs.Tracer`.
+        # `reallocate`/`start_epoch` emit instants stamped with the caller's
+        # `now` — never a clock read — so attaching a tracer cannot perturb
+        # epoch or event timing.
+        self.tracer = None
+        self.trace_track = "pool"
 
     def submit(self, req: FlowRequest) -> None:
         self._pending.append(req)
@@ -218,6 +224,9 @@ class BandwidthPool:
     def start_epoch(self, now: float) -> dict[str, float]:
         """Re-admit pending + surviving flows and fix rates for this epoch."""
         self.epochs += 1
+        if self.tracer is not None:
+            self.tracer.instant(self.trace_track, "epoch", t=now, cat="pool",
+                                epoch=self.epochs)
         return self.reallocate(now)
 
     def reallocate(self, now: float) -> dict[str, float]:
@@ -284,6 +293,12 @@ class BandwidthPool:
             else:  # fresh flow (or a finished flow re-submitted: restart it)
                 rem = req.total_bytes
             self._flows[req.req_id] = _Flow(req, alloc[req.req_id], rem)
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.trace_track, "realloc", t=now, cat="pool",
+                live=len(live), fresh=len(fresh), flows=len(self._flows),
+                reallocs=self.reallocs, replans=self.replans,
+                rates={r.req_id: alloc[r.req_id] for r in admitted})
         return alloc
 
     def advance(self, dt: float) -> list[str]:

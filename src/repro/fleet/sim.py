@@ -275,6 +275,7 @@ class FleetSim:
 
     def __init__(self, num_nodes: int, router: Router, *,
                  cache: Optional[CacheConfig] = None,
+                 tracer=None,
                  **node_kwargs) -> None:
         if num_nodes < 1:
             raise ValueError("need at least one node")
@@ -284,9 +285,14 @@ class FleetSim:
         node_kwargs.pop("epoch_s", None)
         self.router = router
         self.cache_cfg = cache
+        # Observability: one shared tracer, one track namespace per node
+        # ("n0/req-3", "n0/pool", ...) so the Chrome export renders one
+        # process group per node.  Purely observational — see ClusterSim.
+        self.tracer = tracer
         self.nodes: list[FleetNode] = []
         for i in range(num_nodes):
-            sim = ClusterSim(**node_kwargs)
+            sim = ClusterSim(tracer=tracer, track_prefix=f"n{i}/",
+                             **node_kwargs)
             node_cache = None
             if cache is not None:
                 chunk_bytes = sim.kv_spec(cache.chunk_tokens).wire_chunk_bytes
@@ -356,6 +362,11 @@ class FleetSim:
             ev = dataclasses.replace(ev, payload=tr)
         self._owner[tr.req_id] = i
         self._pending[tr.req_id] = (tr, chain)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "fleet/router", "route", t=ev.time, cat="fleet",
+                req_id=tr.req_id, node=i, inflight=node.inflight + 1,
+                hit_rate=tr.hit_rate, hot_tokens=tr.hot_tokens)
         node.arrive()
         node.sim.dispatch(ev)
         node.sim._records[-1].node = i

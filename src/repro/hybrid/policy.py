@@ -22,6 +22,25 @@ from repro.core.types import FlowRequest, KVSpec
 from .planner import plan_split
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplanRecord:
+    """One event-time-stamped re-planning decision.
+
+    Replaces the historical bare ``(now, req_id, fetch_chunks, rate)``
+    tuples — iteration order is preserved, so legacy tuple-unpacking still
+    works — and carries the demand shift the decision produced so a trace
+    consumer can see *why* the pool's pressure fell."""
+
+    t_s: float  # event time the decision was made at
+    req_id: str
+    fetch_chunks: int  # chunks kept on the fetch-span (0 = pure recompute)
+    offered_rate: float  # the allocation that triggered re-planning (B/s)
+
+    def __iter__(self):  # legacy order: (now, req_id, fetch_chunks, rate)
+        return iter((self.t_s, self.req_id, self.fetch_chunks,
+                     self.offered_rate))
+
+
 @dataclasses.dataclass
 class HybridReplanner:
     """Maps a stalling `FlowRequest` to a reduced hybrid demand.
@@ -48,12 +67,15 @@ class HybridReplanner:
     # attached (`cluster.sim.ClusterSim` assigns its event clock; any object
     # with ``now()`` works), every re-planning decision is stamped with the
     # *event* time it was made at — not an epoch index — and logged to
-    # ``history`` as (now_s, req_id, fetch_chunks, offered_rate).  Bounded
-    # like ``contexts``: a long-lived pool keeps only the most recent
-    # ``max_history`` decisions.
+    # ``history`` as a `ReplanRecord`.  Bounded like ``contexts``: a
+    # long-lived pool keeps only the most recent ``max_history`` decisions.
+    # With a tracer attached each record is also emitted as a ``"replan"``
+    # trace instant on ``trace_track`` (purely observational).
     clock: Optional[object] = None
     history: list = dataclasses.field(default_factory=list)
     max_history: int = 4096
+    tracer: Optional[object] = None
+    trace_track: str = "pool"
 
     def register(self, req_id: str, context_tokens: int) -> None:
         self.contexts.pop(req_id, None)
@@ -81,9 +103,16 @@ class HybridReplanner:
         if split.is_pure_fetch:
             return None  # fetching everything is still optimal at this rate
         if self.clock is not None:
-            self.history.append((self.clock.now(), req.req_id,
-                                 split.fetch_chunks, rate))
+            record = ReplanRecord(self.clock.now(), req.req_id,
+                                  split.fetch_chunks, rate)
+            self.history.append(record)
             if len(self.history) > self.max_history:
                 del self.history[:len(self.history) - self.max_history]
+            if self.tracer is not None:
+                self.tracer.instant(
+                    self.trace_track, "replan", t=record.t_s, cat="pool",
+                    req_id=record.req_id, fetch_chunks=record.fetch_chunks,
+                    offered_rate=record.offered_rate,
+                    bytes_per_layer=split.bytes_per_layer)
         return FlowRequest(req.req_id, split.bytes_per_layer,
                            split.layer_compute_s, req.num_layers)

@@ -1,0 +1,12 @@
+# Unified tracing + metrics layer (DESIGN.md §Observability): deterministic
+# span timelines from injected clocks, one lock-safe metric registry, Chrome
+# trace-event (Perfetto) export, and added-TTFT attribution.
+from .attribution import (REQUEST_SUMMARY, TTFTAttribution, attribute_flow,
+                          attribute_trace, check_identity, format_attribution)
+from .export import (assert_valid_chrome_trace, render_waterfall,
+                     to_chrome_trace, validate_chrome_trace,
+                     write_chrome_trace)
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, StatGroup)
+from .trace import Instant, Span, SpanNode, Tracer
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,235 @@
+"""Labeled counters/gauges/histograms behind one lock-safe registry.
+
+Before this module the repo had four ad-hoc stat surfaces — `EngineStats`
+(a plain dataclass), the orchestrator's ``stats`` dict, `StoreStats`, and
+the replanner's history tuples — none of which could be read consistently
+while another thread was writing.  `MetricsRegistry` replaces them with one
+API and one invariant, borrowed from `StoreStats`: **every mutation and
+every snapshot takes the registry lock, so a snapshot is a consistent
+cut**.  Multi-field updates that must be seen together go through one
+:meth:`StatGroup.add` call (e.g. the engine's ``reused + computed`` pair)
+— a concurrent snapshot can never observe one field of the pair without
+the other (the torn-snapshot tests assert exactly this).
+
+`StatGroup` is the migration shim: it answers both the orchestrator's
+dict-style ``stats["hits"] += 1`` and the engine's attribute-style
+``stats.requests += 1`` against registry-backed counters, so every
+existing call site and test keeps working while the storage moves.
+
+Histograms are deterministic: bounded sample reservoirs keep the *first*
+``max_samples`` observations (no random eviction) and percentiles use the
+same nearest-rank definition as `cluster.metrics.percentile`.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Iterator, Optional, Sequence
+
+
+def _nearest_rank(xs: Sequence[float], q: float) -> float:
+    if not xs:
+        return math.nan
+    s = sorted(xs)
+    k = max(1, math.ceil(q * len(s)))
+    return s[k - 1]
+
+
+class Counter:
+    """Monotone counter.  Mutate via :meth:`inc` (under the registry lock)."""
+
+    def __init__(self, name: str, lock: threading.Lock) -> None:
+        self.name = name
+        self._lock = lock
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+    def _peek(self) -> int:  # caller holds the lock
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    def __init__(self, name: str, lock: threading.Lock) -> None:
+        self.name = name
+        self._lock = lock
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = v
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def _peek(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Streaming count/sum/min/max plus a bounded first-N sample reservoir
+    for nearest-rank percentiles.  Deterministic by construction: the kept
+    sample set depends only on observation order, never on randomness."""
+
+    def __init__(self, name: str, lock: threading.Lock,
+                 max_samples: int = 4096) -> None:
+        self.name = name
+        self._lock = lock
+        self.max_samples = max_samples
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._samples: list[float] = []
+
+    def observe(self, v: float) -> None:
+        with self._lock:
+            self._count += 1
+            self._sum += v
+            self._min = min(self._min, v)
+            self._max = max(self._max, v)
+            if len(self._samples) < self.max_samples:
+                self._samples.append(v)
+
+    def _peek(self) -> dict:
+        if self._count == 0:
+            return {"count": 0, "sum": 0.0, "mean": math.nan,
+                    "min": math.nan, "max": math.nan, "p50": math.nan,
+                    "p95": math.nan, "p99": math.nan}
+        return {"count": self._count, "sum": self._sum,
+                "mean": self._sum / self._count,
+                "min": self._min, "max": self._max,
+                "p50": _nearest_rank(self._samples, 0.50),
+                "p95": _nearest_rank(self._samples, 0.95),
+                "p99": _nearest_rank(self._samples, 0.99)}
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return self._peek()
+
+
+class StatGroup:
+    """A named family of counters supporting dict-style *and* attribute-style
+    access, with an atomic multi-field :meth:`add` and a consistent
+    :meth:`snapshot` — the drop-in replacement for the orchestrator's stats
+    dict and `EngineStats`.
+
+    ``group["hits"] += 1`` and ``group.hits += 1`` both resolve to a locked
+    counter increment; ``group.add(a=1, b=n)`` applies several deltas under
+    ONE lock acquisition so no snapshot can tear the pair apart.
+    """
+
+    def __init__(self, registry: "MetricsRegistry", prefix: str,
+                 fields: Sequence[str]) -> None:
+        object.__setattr__(self, "_registry", registry)
+        object.__setattr__(self, "_prefix", prefix)
+        object.__setattr__(self, "_counters",
+                           {f: registry.counter(f"{prefix}.{f}")
+                            for f in fields})
+
+    # dict-style ---------------------------------------------------------------
+    def __getitem__(self, field: str) -> int:
+        return self._counters[field].value
+
+    def __setitem__(self, field: str, value: int) -> None:
+        c = self._counters[field]
+        with self._registry._lock:
+            c._value = value
+
+    def __contains__(self, field: str) -> bool:
+        return field in self._counters
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._counters)
+
+    def keys(self):
+        return self._counters.keys()
+
+    # attribute-style ----------------------------------------------------------
+    def __getattr__(self, field: str) -> int:
+        try:
+            return self._counters[field].value
+        except KeyError:
+            raise AttributeError(field) from None
+
+    def __setattr__(self, field: str, value: int) -> None:
+        self[field] = value
+
+    # atomic multi-field update ------------------------------------------------
+    def add(self, **deltas: int) -> None:
+        """Apply several field deltas under one lock acquisition — fields
+        updated together are always observed together."""
+        with self._registry._lock:
+            for field, delta in deltas.items():
+                self._counters[field]._value += delta
+
+    def snapshot(self) -> dict:
+        """Consistent cut of all fields (mirrors `StoreStats.snapshot`)."""
+        with self._registry._lock:
+            return {f: c._peek() for f, c in self._counters.items()}
+
+    def __repr__(self) -> str:
+        return f"StatGroup({self._prefix!r}, {self.snapshot()})"
+
+
+class MetricsRegistry:
+    """One process-wide (or per-subsystem) metric namespace.
+
+    All instruments created by a registry share ITS lock, so
+    :meth:`snapshot` is a consistent cut across every counter, gauge and
+    histogram at once — not per-instrument.  Creating an instrument that
+    already exists returns the existing one (labels live in the name:
+    ``"engine.requests"``, ``"store.node0.evictions"``).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters.setdefault(name, Counter(name, self._lock))
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges.setdefault(name, Gauge(name, self._lock))
+        return g
+
+    def histogram(self, name: str, max_samples: int = 4096) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms.setdefault(
+                name, Histogram(name, self._lock, max_samples))
+        return h
+
+    def group(self, prefix: str, fields: Sequence[str]) -> StatGroup:
+        return StatGroup(self, prefix, fields)
+
+    def snapshot(self) -> dict:
+        """One consistent cut of the whole registry:
+        ``{"counters": {...}, "gauges": {...}, "histograms": {...}}``."""
+        with self._lock:
+            return {
+                "counters": {n: c._peek()
+                             for n, c in sorted(self._counters.items())},
+                "gauges": {n: g._peek()
+                           for n, g in sorted(self._gauges.items())},
+                "histograms": {n: h._peek()
+                               for n, h in sorted(self._histograms.items())},
+            }

@@ -39,6 +39,7 @@ from repro.hybrid.executor import HybridPlan, fetch_span_plan
 from repro.models import Model
 from repro.models import dense, moe
 from repro.models import layers as nn
+from repro.obs.metrics import MetricsRegistry
 
 from .kv_chunks import (cache_to_chunks, layer_payload_to_device_kv,
                         layer_payload_to_kv)
@@ -62,17 +63,26 @@ class RequestResult:
         return self.matched_tokens > 0
 
 
-@dataclasses.dataclass
-class EngineStats:
-    requests: int = 0
-    prefix_tokens_reused: int = 0
-    tokens_computed: int = 0
-    commits: int = 0
+_ENGINE_FIELDS = ("requests", "prefix_tokens_reused", "tokens_computed",
+                  "commits")
+
+
+def EngineStats(registry: Optional[MetricsRegistry] = None):
+    """Engine counters as a registry-backed `obs.metrics.StatGroup`.
+
+    Historically a plain dataclass; every field is now a locked counter in a
+    `MetricsRegistry`, multi-field updates go through one atomic
+    :meth:`StatGroup.add`, and ``snapshot()`` is a consistent cut (mirrors
+    `StoreStats`).  Attribute access (``stats.requests``) is unchanged.
+    """
+    return (registry or MetricsRegistry()).group("engine", _ENGINE_FIELDS)
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, orch: Orchestrator, *,
-                 max_decode_len: int = 64, sync_commit: bool = True) -> None:
+                 max_decode_len: int = 64, sync_commit: bool = True,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None) -> None:
         self.model = model
         self.params = params
         self.orch = orch
@@ -80,7 +90,14 @@ class ServingEngine:
         self.spec = orch.spec
         self.sync_commit = sync_commit
         self.max_decode_len = max_decode_len
-        self.stats = EngineStats()
+        # one registry per serving stack: default to the orchestrator's so
+        # engine + orch counters snapshot as a single consistent cut
+        self.metrics = metrics if metrics is not None else orch.metrics
+        self.stats = EngineStats(self.metrics)
+        # wall-clock tracer (obs.trace.Tracer); shared with the orchestrator
+        # unless the caller splits them.  Nullable: `if tracer is not None`
+        # guards keep the uninstrumented path at one attribute test.
+        self.tracer = tracer if tracer is not None else orch.tracer
         self._layerwise_ok = (self.cfg.family in ("dense", "vlm")
                               or (self.cfg.family == "moe"
                                   and self.cfg.moe_every == 1))
@@ -135,7 +152,13 @@ class ServingEngine:
         greedy decode -> commit fresh chunks."""
         tokens = np.asarray(tokens, dtype=np.int32)
         self.stats.requests += 1
-        plan = self.orch.plan(tokens, layer_compute_hint_s, req_id=req_id)
+        if self.tracer is not None:
+            with self.tracer.span(req_id, "plan", cat="engine") as a:
+                plan = self.orch.plan(tokens, layer_compute_hint_s,
+                                      req_id=req_id)
+                a["matched_chunks"] = plan.match.num_chunks
+        else:
+            plan = self.orch.plan(tokens, layer_compute_hint_s, req_id=req_id)
         match = plan.match
         # always keep >= 1 suffix token to produce next-token logits
         n_chunks = match.num_chunks
@@ -162,8 +185,22 @@ class ServingEngine:
         else:
             result = self._serve_chunkwise(tokens, plan, n_chunks, P, req_id)
 
-        self.stats.prefix_tokens_reused += result.matched_tokens
-        self.stats.tokens_computed += len(tokens) - result.matched_tokens
+        # one atomic add: a concurrent snapshot must never see the reused
+        # count without the computed count (the torn-snapshot invariant —
+        # their sum always equals a whole number of served prompts)
+        self.stats.add(prefix_tokens_reused=result.matched_tokens,
+                       tokens_computed=len(tokens) - result.matched_tokens)
+        self.metrics.histogram("engine.ttft_model_s").observe(
+            result.ttft_model_s)
+        self.metrics.histogram("engine.compute_s").observe(result.compute_s)
+        if self.tracer is not None:
+            self.tracer.instant(
+                req_id, "served", cat="engine",
+                matched_tokens=result.matched_tokens,
+                delivery=(result.delivery.name if result.delivery is not None
+                          else "none"),
+                ttft_model_s=result.ttft_model_s,
+                compute_s=result.compute_s)
 
         if max_new_tokens > 0:
             result.new_tokens = self._greedy_decode(
@@ -177,27 +214,40 @@ class ServingEngine:
         lg, cache = self._prefill(self.params, batch)
         lg = np.asarray(jax.block_until_ready(lg)[0], np.float32)
         dt = time.perf_counter() - t0
-        self._commit(tokens, cache)
+        if self.tracer is not None:
+            self.tracer.span_at(req_id, "compute", t0, t0 + dt, cat="engine")
+        self._commit(tokens, cache, req_id)
         self._last_cache = cache
         return RequestResult(req_id, lg, [], 0, None, dt, dt, 0.0, [])
 
+    def _fetch(self, plan, n_chunks, req_id):
+        if self.tracer is not None:
+            with self.tracer.span(req_id, "fetch", cat="engine") as a:
+                res = self.orch.fetch(self._trim_plan(plan, n_chunks))
+                a["completion_s"] = res.completion_s
+            return res
+        return self.orch.fetch(self._trim_plan(plan, n_chunks))
+
     def _serve_chunkwise(self, tokens, plan, n_chunks, P, req_id) -> RequestResult:
-        res = self.orch.fetch(self._trim_plan(plan, n_chunks))
+        res = self._fetch(plan, n_chunks, req_id)
         prefix = self._payloads_to_prefix(res.payloads, n_chunks)
         batch = {"tokens": jnp.asarray(tokens[P:])[None, :]}
         t0 = time.perf_counter()
         lg, cache = self._prefill_prefix(self.params, batch, prefix, P)
         lg = np.asarray(jax.block_until_ready(lg)[0], np.float32)
         dt = time.perf_counter() - t0
+        if self.tracer is not None:
+            self.tracer.span_at(req_id, "compute", t0, t0 + dt, cat="engine")
         ttft = res.completion_s + dt  # Fig. 7a: transfer then compute
-        self._commit(tokens, cache)
+        self._commit(tokens, cache, req_id)
         self._last_cache = cache
         return RequestResult(req_id, lg, [], P, Delivery.CHUNKWISE, ttft, dt,
                              res.completion_s, [])
 
     def _serve_layerwise(self, tokens, plan, n_chunks, P, req_id) -> RequestResult:
         cfg = self.cfg
-        res = self.orch.fetch(self._trim_plan(plan, n_chunks))
+        tracer = self.tracer
+        res = self._fetch(plan, n_chunks, req_id)
         suffix = jnp.asarray(tokens[P:])[None, :]
         positions = P + jnp.arange(suffix.shape[1])[None, :]
         x = self._embed(self.params["embed"], suffix, positions)
@@ -207,13 +257,22 @@ class ServingEngine:
             # wait for the layer-ready notification (virtual transfer clock);
             # quantized payloads dequantize on device (fused Pallas kernel
             # when available), identity payloads are a bit view
-            k_d, v_d = layer_payload_to_device_kv(res.payloads[l], n_chunks,
-                                                  self.spec, act, layer=l)
+            if tracer is not None:
+                with tracer.span(req_id, "dequant", cat="engine", layer=l):
+                    k_d, v_d = layer_payload_to_device_kv(
+                        res.payloads[l], n_chunks, self.spec, act, layer=l)
+            else:
+                k_d, v_d = layer_payload_to_device_kv(
+                    res.payloads[l], n_chunks, self.spec, act, layer=l)
             pk, pv = k_d[None], v_d[None]
             t0 = time.perf_counter()
             x, sk, sv = self._layer(self._layer_params(l), x, pk, pv, positions)
             x = jax.block_until_ready(x)
-            compute_times.append(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            compute_times.append(dt)
+            if tracer is not None:
+                tracer.span_at(req_id, "compute", t0, t0 + dt, cat="engine",
+                               layer=l)
             segs_k.append(jnp.concatenate([pk, sk], axis=1))
             segs_v.append(jnp.concatenate([pv, sv], axis=1))
         t0 = time.perf_counter()
@@ -223,12 +282,34 @@ class ServingEngine:
         ready = [e.t_ready_s for e in res.events]
         ttft = pipeline_ttft(ready, compute_times) + final_dt
         stalls = per_layer_stalls(ready, compute_times)
+        if tracer is not None:
+            self._emit_model_timeline(req_id, ready, compute_times, final_dt)
         cache = jnp.stack([jnp.stack([k, v]) for k, v in zip(segs_k, segs_v)])
-        self._commit(tokens, cache)
+        self._commit(tokens, cache, req_id)
         self._last_cache = cache
         return RequestResult(req_id, lg, [], P, Delivery.LAYERWISE, ttft,
                              sum(compute_times) + final_dt, res.completion_s,
                              stalls)
+
+    def _emit_model_timeline(self, req_id, ready, compute_times, final_dt):
+        """The Eq. 3-composed timeline on the virtual transfer clock: layer
+        l's compute starts at max(ready_l, finish_{l-1}) — the same recurrence
+        `pipeline_ttft` folds, laid out as spans so the TTFT waterfall shows
+        where transfer gated compute (track ``"<req>/model"``)."""
+        track = req_id + "/model"
+        finish = 0.0
+        for l, (r, c) in enumerate(zip(ready, compute_times)):
+            self.tracer.instant(track, "layer_ready", t=r, cat="model",
+                                layer=l)
+            start = max(r, finish)
+            if l > 0 and start > finish:
+                self.tracer.span_at(track, "stall", finish, start,
+                                    cat="model", layer=l)
+            self.tracer.span_at(track, "compute", start, start + c,
+                                cat="model", layer=l)
+            finish = start + c
+        self.tracer.span_at(track, "final", finish, finish + final_dt,
+                            cat="model")
 
     def _serve_hybrid(self, tokens, plan: HybridPlan, n_chunks, req_id
                       ) -> RequestResult:
@@ -265,12 +346,19 @@ class ServingEngine:
             vs.append(v)
         return jnp.asarray(np.stack([np.stack(ks), np.stack(vs)], axis=1))[:, :, None]
 
-    def _commit(self, tokens, cache):
+    def _commit(self, tokens, cache, req_id="req"):
         if not self.sync_commit:
             return
-        keys_all = chunk_keys(tokens, self.spec.chunk_tokens)
-        objs = cache_to_chunks(np.asarray(cache), keys_all, self.spec)
-        new = self.orch.commit(tokens, objs)
+        if self.tracer is not None:
+            with self.tracer.span(req_id, "commit", cat="engine") as a:
+                keys_all = chunk_keys(tokens, self.spec.chunk_tokens)
+                objs = cache_to_chunks(np.asarray(cache), keys_all, self.spec)
+                new = self.orch.commit(tokens, objs)
+                a["new_chunks"] = len(new)
+        else:
+            keys_all = chunk_keys(tokens, self.spec.chunk_tokens)
+            objs = cache_to_chunks(np.asarray(cache), keys_all, self.spec)
+            new = self.orch.commit(tokens, objs)
         self.stats.commits += len(new)
 
     def _greedy_decode(self, result, tokens, max_new_tokens) -> list[int]:

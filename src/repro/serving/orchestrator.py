@@ -24,6 +24,10 @@ from repro.core.aggregation import DEFAULT_THETA_BYTES, AggResult
 from repro.core.scheduler import allocate
 from repro.core.types import MatchResult
 from repro.hybrid.executor import HybridPlan, fetch_span_plan
+from repro.obs.metrics import MetricsRegistry
+
+_ORCH_FIELDS = ("hits", "misses", "fallbacks", "hedged", "hybrid_splits",
+                "reallocs", "evicted_objects")
 
 
 @dataclasses.dataclass
@@ -67,7 +71,9 @@ class Orchestrator:
                  hedge: bool = False,
                  hybrid: Optional["HybridPlanner"] = None,
                  pool: Optional["BandwidthPool"] = None,
-                 clock=None) -> None:
+                 clock=None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None) -> None:
         self.index = index
         self.gateway = gateway
         self.spec = spec
@@ -88,8 +94,13 @@ class Orchestrator:
         # simulation, WallClock when serving live).
         self.pool = pool
         self.clock = clock
-        self.stats = {"hits": 0, "misses": 0, "fallbacks": 0, "hedged": 0,
-                      "hybrid_splits": 0, "reallocs": 0, "evicted_objects": 0}
+        # registry-backed counters (obs.metrics): dict-style access is
+        # unchanged (`stats["hits"] += 1`), but every mutation is locked and
+        # `stats.snapshot()` is a consistent cut (mirrors StoreStats)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = self.metrics.group("orch", _ORCH_FIELDS)
+        # nullable obs tracer; `plan` emits one decision instant per request
+        self.tracer = tracer
         # index eviction must delete the backing objects, or the store leaks
         # every evicted chunk forever; respect a callback the caller installed
         if self.index.on_evict is None:
@@ -103,6 +114,20 @@ class Orchestrator:
     def plan(self, tokens, layer_compute_s: float,
              active: Optional[list[FlowRequest]] = None,
              req_id: str = "req") -> TransferPlan:
+        plan = self._plan(tokens, layer_compute_s, active, req_id)
+        if self.tracer is not None:
+            self.tracer.instant(
+                req_id, "plan_decision", cat="orch",
+                matched_chunks=plan.match.num_chunks,
+                delivery=(plan.delivery.name if plan.delivery is not None
+                          else "recompute"),
+                rate=plan.rate, hedged=plan.hedged,
+                fetch_chunks=getattr(plan, "fetch_chunks", None))
+        return plan
+
+    def _plan(self, tokens, layer_compute_s: float,
+              active: Optional[list[FlowRequest]] = None,
+              req_id: str = "req") -> TransferPlan:
         match = self.index.match(tokens)
         if match.num_chunks < self.min_hit_chunks:
             self.stats["misses" if not match.is_hit else "fallbacks"] += 1

@@ -389,10 +389,15 @@ class TestEventClockPlanning:
         t0 = 3.5
         cs.run([TraceRequest("r0", t0, 16384, 0.875)])
         assert len(rep.history) == 1
-        now, req_id, fetch_chunks, rate = rep.history[0]
-        assert now == t0 and req_id == "r0"
-        assert 0 < fetch_chunks < 16384 * 0.875 // 64
-        assert rate == pytest.approx(2 * GBPS)
+        record = rep.history[0]
+        assert record.t_s == t0 and record.req_id == "r0"
+        assert 0 < record.fetch_chunks < 16384 * 0.875 // 64
+        assert record.offered_rate == pytest.approx(2 * GBPS)
+        # legacy tuple-unpacking order is preserved
+        now, req_id, fetch_chunks, rate = record
+        assert (now, req_id, fetch_chunks, rate) == \
+            (record.t_s, record.req_id, record.fetch_chunks,
+             record.offered_rate)
 
 
 # ---------------------------------------------------------------------------

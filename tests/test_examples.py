@@ -40,6 +40,15 @@ def test_cluster_trace():
     assert "cal-stall-opt" in out
 
 
+def test_trace_waterfall():
+    out = _run_example("trace_waterfall.py")
+    assert "OK: attribution telescopes exactly" in out
+    assert "OK: exported" in out and "Chrome trace events" in out
+    assert "OK: tracer attached changed no simulated timestamp" in out
+    # the waterfall itself rendered, with nested wire/compute rows
+    assert "track r" in out and "wire" in out and "compute" in out
+
+
 def test_hybrid_prefill():
     out = _run_example("hybrid_prefill.py")
     assert "OK: hybrid <= min(pure-fetch, pure-recompute)" in out

@@ -1,0 +1,490 @@
+"""Observability layer (DESIGN.md §Observability): tracer and metric units,
+Chrome trace-event export + schema validation, TTFT-waterfall rendering,
+added-TTFT attribution — including the exact identity on the committed golden
+cluster and fleet traces — and the zero-perturbation contract (attaching a
+tracer changes no simulated timestamp)."""
+import json
+import math
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.cluster import ClusterSim, TraceRequest, load_trace, summarize
+from repro.cluster.metrics import percentile
+from repro.core.scheduler import Policy
+from repro.core.simulator import PAPER_MARGIN_BPS
+from repro.fleet import make_router
+from repro.fleet.sim import CacheConfig, FleetSim
+from repro.obs import (MetricsRegistry, Span, Tracer,
+                       assert_valid_chrome_trace, attribute_flow,
+                       attribute_trace, check_identity, format_attribution,
+                       render_waterfall, to_chrome_trace,
+                       validate_chrome_trace, write_chrome_trace)
+
+DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+GBPS = 1e9 / 8
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def now(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+class TestTracer:
+    def test_explicit_timestamps_never_read_the_clock(self):
+        boom = type("Boom", (), {"now": staticmethod(
+            lambda: (_ for _ in ()).throw(AssertionError("clock read")))})()
+        tr = Tracer(boom)
+        tr.span_at("t", "a", 1.0, 2.0)
+        tr.instant("t", "b", t=1.5)
+        assert len(tr) == 2
+
+    def test_injected_clock_stamps_clock_scoped_emission(self):
+        clk = FakeClock(10.0)
+        tr = Tracer(clk)
+        with tr.span("t", "work") as args:
+            clk.t = 12.5
+            args["n"] = 3
+        (s,) = tr.spans("t")
+        assert (s.t0, s.t1, s.args["n"]) == (10.0, 12.5, 3)
+        assert tr.instants("t") == []
+        tr.instant("t", "evt")
+        assert tr.instants("t")[0].t == 12.5
+
+    def test_seq_preserves_emission_order_at_equal_times(self):
+        tr = Tracer(FakeClock())
+        a = tr.instant("t", "a", t=1.0)
+        b = tr.instant("t", "b", t=1.0)
+        assert a.seq < b.seq
+
+    def test_span_tree_nests_by_containment_not_emission_order(self):
+        tr = Tracer(FakeClock())
+        # children emitted before the parent, interleaved with another track
+        tr.span_at("r1", "inner", 2.0, 3.0)
+        tr.span_at("r2", "other", 0.0, 9.0)
+        tr.span_at("r1", "mid", 1.0, 4.0)
+        tr.span_at("r1", "outer", 0.0, 5.0)
+        (root,) = tr.span_tree("r1")
+        assert root.span.name == "outer"
+        (mid,) = root.children
+        assert mid.span.name == "mid"
+        assert [s.name for _, s in root.walk()] == ["outer", "mid", "inner"]
+        depths = dict((s.name, d) for d, s in root.walk())
+        assert depths == {"outer": 0, "mid": 1, "inner": 2}
+
+    def test_identical_intervals_nest_first_recorded_as_parent(self):
+        tr = Tracer(FakeClock())
+        tr.span_at("t", "first", 0.0, 1.0)
+        tr.span_at("t", "second", 0.0, 1.0)
+        (root,) = tr.span_tree("t")
+        assert root.span.name == "first"
+        assert root.children[0].span.name == "second"
+
+    def test_tracks_queries_and_clear(self):
+        tr = Tracer(FakeClock())
+        tr.span_at("a", "x", 0.0, 1.0)
+        tr.instant("b", "y", t=0.5)
+        tr.span_at("a", "z", 1.0, 2.0)
+        assert tr.tracks() == ["a", "b"]
+        assert [s.name for s in tr.spans("a")] == ["x", "z"]
+        assert [s.name for s in tr.spans(name="z")] == ["z"]
+        assert [i.name for i in tr.instants()] == ["y"]
+        tr.clear()
+        assert len(tr) == 0 and tr.tracks() == []
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+class TestMetrics:
+    def test_counter_gauge_roundtrip(self):
+        reg = MetricsRegistry()
+        c = reg.counter("c")
+        c.inc()
+        c.inc(4)
+        assert c.value == 5
+        assert reg.counter("c") is c  # same name -> same instrument
+        g = reg.gauge("g")
+        g.set(2.5)
+        assert g.value == 2.5
+
+    def test_histogram_nearest_rank_matches_cluster_metrics(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("h")
+        xs = [float(i) for i in range(37)]
+        for x in xs:
+            h.observe(x)
+        snap = h.snapshot()
+        assert snap["count"] == 37 and snap["min"] == 0.0 and snap["max"] == 36.0
+        for q in (0.50, 0.95, 0.99):
+            assert snap[f"p{int(q * 100)}"] == percentile(xs, q)
+
+    def test_empty_histogram_snapshots_nan_not_raise(self):
+        snap = MetricsRegistry().histogram("h").snapshot()
+        assert snap["count"] == 0
+        assert math.isnan(snap["mean"]) and math.isnan(snap["p99"])
+
+    def test_group_dict_and_attribute_access_share_storage(self):
+        reg = MetricsRegistry()
+        st = reg.group("orch", ("hits", "misses"))
+        st["hits"] += 1
+        st.hits += 2
+        assert st["hits"] == st.hits == 3
+        assert "hits" in st and "nope" not in st
+        assert sorted(st.keys()) == ["hits", "misses"]
+        assert st.snapshot() == {"hits": 3, "misses": 0}
+        with pytest.raises(AttributeError):
+            st.nope
+
+    def test_registry_snapshot_is_one_cut_of_everything(self):
+        reg = MetricsRegistry()
+        reg.counter("n.a").inc(2)
+        reg.gauge("n.g").set(1.0)
+        reg.histogram("n.h").observe(3.0)
+        snap = reg.snapshot()
+        assert snap["counters"] == {"n.a": 2}
+        assert snap["gauges"] == {"n.g": 1.0}
+        assert snap["histograms"]["n.h"]["count"] == 1
+
+    def test_concurrent_paired_adds_never_tear(self):
+        """The StatGroup invariant the engine relies on: two fields updated
+        by one `add` are observed together by every concurrent snapshot."""
+        reg = MetricsRegistry()
+        st = reg.group("engine", ("prefix_tokens_reused", "tokens_computed"))
+        PROMPT, N = 64, 300
+        torn, stop = [], threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                s = st.snapshot()
+                if (s["prefix_tokens_reused"] + s["tokens_computed"]) % PROMPT:
+                    torn.append(s)
+
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        for t in readers:
+            t.start()
+
+        def writer(seed):
+            for i in range(N):
+                reused = (seed * 31 + i) % PROMPT
+                st.add(prefix_tokens_reused=reused,
+                       tokens_computed=PROMPT - reused)
+
+        writers = [threading.Thread(target=writer, args=(s,)) for s in range(4)]
+        for w in writers:
+            w.start()
+        for w in writers:
+            w.join()
+        stop.set()
+        for t in readers:
+            t.join()
+        assert not torn
+        s = st.snapshot()
+        assert s["prefix_tokens_reused"] + s["tokens_computed"] == 4 * N * PROMPT
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export + schema validation + waterfall
+# ---------------------------------------------------------------------------
+class TestExport:
+    def _tracer(self):
+        tr = Tracer(FakeClock())
+        tr.span_at("n0/r0", "serve", 0.0, 2.0, cat="cluster", layer=0)
+        tr.span_at("n0/r0", "wire", 0.5, 1.0, cat="wire")
+        tr.instant("n1/pool", "realloc", t=0.25, cat="pool", flows=2)
+        tr.span_at("bare", "x", 0.0, 1.0)
+        return tr
+
+    def test_export_structure_and_track_split(self):
+        doc = to_chrome_trace(self._tracer())
+        assert_valid_chrome_trace(doc)
+        evs = doc["traceEvents"]
+        meta = [e for e in evs if e["ph"] == "M"]
+        procs = {e["args"]["name"] for e in meta if e["name"] == "process_name"}
+        threads = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+        assert procs == {"n0", "n1", "repro"}  # "bare" lands in the default
+        assert threads == {"r0", "pool", "bare"}
+        xs = [e for e in evs if e["ph"] == "X"]
+        assert [e["name"] for e in xs] == ["serve", "x", "wire"]  # (ts, seq)
+        serve = xs[0]
+        assert serve["ts"] == 0.0 and serve["dur"] == 2.0e6  # µs
+        (inst,) = [e for e in evs if e["ph"] == "i"]
+        assert inst["s"] == "t" and inst["args"]["flows"] == 2
+        # spans on different processes get different pids
+        assert serve["pid"] != inst["pid"]
+
+    def test_export_is_deterministic_and_json_roundtrips(self, tmp_path):
+        p = tmp_path / "trace.json"
+        doc = write_chrome_trace(self._tracer(), str(p))
+        with open(p) as f:
+            loaded = json.load(f)
+        assert loaded == doc
+        assert validate_chrome_trace(loaded) == []
+        assert json.dumps(doc) == json.dumps(to_chrome_trace(self._tracer()))
+
+    def test_validator_catches_malformed_docs(self):
+        assert validate_chrome_trace([]) != []
+        assert validate_chrome_trace({}) != []
+        bad = {"traceEvents": [
+            {"name": "a", "ph": "Z", "ts": 0, "pid": 1, "tid": 1},
+            {"name": "b", "ph": "X", "ts": 0, "dur": -1, "pid": 1, "tid": 1},
+            {"name": "c", "ph": "X", "ts": -5, "dur": 1, "pid": 1, "tid": 1},
+            {"name": "d", "ph": "i", "ts": 0, "s": "q", "pid": 1, "tid": 1},
+            {"ph": "X", "ts": 0, "dur": 1, "pid": 1, "tid": 1},
+            {"name": "f", "ph": "X", "ts": 0, "dur": 1, "pid": "x", "tid": 1},
+        ]}
+        errors = validate_chrome_trace(bad)
+        assert len(errors) == 6
+        with pytest.raises(ValueError):
+            assert_valid_chrome_trace(bad)
+
+    def test_validate_cli(self, tmp_path):
+        good = tmp_path / "good.json"
+        write_chrome_trace(self._tracer(), str(good))
+        bad = tmp_path / "bad.json"
+        bad.write_text('{"traceEvents": [{"ph": "Z"}]}')
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(DATA), os.pardir, "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        runs = {str(good): 0, str(bad): 1}
+        for path, want in runs.items():
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.obs.export", "--validate", path],
+                env=env, capture_output=True, text=True)
+            assert proc.returncode == want, proc.stdout + proc.stderr
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.obs.export"], env=env,
+            capture_output=True, text=True)
+        assert proc.returncode == 2
+
+    def test_waterfall_renders_nested_rows(self):
+        tr = self._tracer()
+        out = render_waterfall(tr, "n0/r0")
+        lines = out.splitlines()
+        assert "track n0/r0" in lines[0]
+        assert any(l.lstrip().startswith("serve") for l in lines)
+        assert any(l.lstrip().startswith("wire") for l in lines)
+        # nested span is indented deeper than its parent
+        serve_line = next(l for l in lines if l.lstrip().startswith("serve"))
+        wire_line = next(l for l in lines if l.lstrip().startswith("wire"))
+        assert (len(wire_line) - len(wire_line.lstrip())
+                > len(serve_line) - len(serve_line.lstrip()))
+        assert render_waterfall(tr, "nope").startswith("(no spans")
+
+
+# ---------------------------------------------------------------------------
+# Attribution unit behaviour
+# ---------------------------------------------------------------------------
+class TestAttributionUnits:
+    def test_recompute_mode_attributes_everything_to_queue(self):
+        a = attribute_flow("r", "recompute", arrival_s=0.0, admit_s=0.3,
+                           prefill_done_s=1.3, num_layers=10,
+                           layer_compute_s=0.1, per_layer_bytes=[0.0] * 10,
+                           n_objects=0)
+        assert a.queue_s == pytest.approx(0.3)
+        assert a.bandwidth_stall_s == 0.0 and a.gate_stall_s == 0.0
+        assert a.added_ttft_s == pytest.approx(0.3)
+        assert abs(a.residual_s) < 1e-12
+
+    def test_layerwise_requires_avail_rel(self):
+        with pytest.raises(ValueError):
+            attribute_flow("r", "layerwise", arrival_s=0.0, admit_s=0.0,
+                           prefill_done_s=1.0, num_layers=2,
+                           layer_compute_s=0.1, per_layer_bytes=[1.0, 1.0],
+                           n_objects=1)
+
+    def test_unknown_mode_raises(self):
+        with pytest.raises(ValueError):
+            attribute_flow("r", "warp", arrival_s=0.0, admit_s=0.0,
+                           prefill_done_s=1.0, num_layers=2,
+                           layer_compute_s=0.1, per_layer_bytes=[1.0],
+                           n_objects=1)
+
+    def test_check_identity_raises_on_fudged_components(self):
+        import dataclasses
+        a = attribute_flow("r", "recompute", arrival_s=0.0, admit_s=0.3,
+                           prefill_done_s=1.3, num_layers=10,
+                           layer_compute_s=0.1, per_layer_bytes=[0.0] * 10,
+                           n_objects=0)
+        broken = dataclasses.replace(a, queue_s=a.queue_s + 1e-3)
+        with pytest.raises(AssertionError):
+            check_identity({"r": broken})
+        assert check_identity({"r": a}) <= 1e-12
+
+    def test_format_attribution_is_a_table(self):
+        a = attribute_flow("req-1", "recompute", arrival_s=0.0, admit_s=0.0,
+                           prefill_done_s=1.0, num_layers=4,
+                           layer_compute_s=0.25, per_layer_bytes=[0.0] * 4,
+                           n_objects=0)
+        out = format_attribution({"req-1": a})
+        assert "req-1" in out and "recompute" in out
+        assert len(out.splitlines()) == 3  # header, rule, one row
+
+
+# ---------------------------------------------------------------------------
+# Golden traces: zero perturbation + exact attribution identity
+# ---------------------------------------------------------------------------
+def _run_golden_cluster(tracer=None):
+    trace = load_trace(os.path.join(DATA, "golden_trace.json"))
+    sim = ClusterSim(cap_bps=50 * GBPS, policy=Policy.CAL_STALL_OPT,
+                     margin_bps=PAPER_MARGIN_BPS, tracer=tracer)
+    return sim.run(trace)
+
+
+def _run_golden_fleet(tracer=None):
+    trace = load_trace(os.path.join(DATA, "golden_trace_fleet.json"))
+    sim = FleetSim(2, make_router("affinity"),
+                   cache=CacheConfig(hot_capacity_bytes=2 * 1024 ** 3,
+                                     policy="lru"),
+                   cap_bps=20 * GBPS, max_flows=8, tracer=tracer)
+    return sim.run(trace)
+
+
+def _record_key(r):
+    return (r.req_id, r.arrival_s, r.admit_s, r.flow_done_s,
+            r.prefill_done_s, r.bytes_total, r.layer_compute_s, r.replanned)
+
+
+class TestGoldenClusterObservability:
+    def test_tracer_changes_no_simulated_timestamp(self):
+        bare = _run_golden_cluster()
+        traced = _run_golden_cluster(Tracer())
+        assert ([_record_key(r) for r in bare.records]
+                == [_record_key(r) for r in traced.records])  # exact, not approx
+        assert bare.events == traced.events
+        assert bare.reallocs == traced.reallocs
+
+    def test_attribution_identity_within_1e6(self):
+        tr = Tracer()
+        res = _run_golden_cluster(tr)
+        attrs = attribute_trace(tr)
+        done = [r for r in res.records if r.done]
+        assert len(attrs) == len(done) > 0
+        assert check_identity(attrs, tol=1e-6) < 1e-6
+        by_id = {r.req_id: r for r in done}
+        for rid, a in attrs.items():
+            assert a.ttft_s == pytest.approx(by_id[rid].ttft_s, abs=1e-12)
+            assert a.queue_s == pytest.approx(by_id[rid].queue_s, abs=1e-12)
+
+    def test_every_request_has_spans_and_summary(self):
+        tr = Tracer()
+        res = _run_golden_cluster(tr)
+        for r in res.records:
+            if not r.done:
+                continue
+            names = {s.name for s in tr.spans(r.req_id)}
+            assert "serve" in names
+            assert tr.instants(r.req_id, "arrive")
+            assert len(tr.instants(r.req_id, "request")) == 1
+        assert tr.instants("pool", "realloc")  # pool track is live
+
+    def test_export_round_trips_the_schema(self, tmp_path):
+        tr = Tracer()
+        _run_golden_cluster(tr)
+        p = tmp_path / "golden.json"
+        write_chrome_trace(tr, str(p))
+        with open(p) as f:
+            assert validate_chrome_trace(json.load(f)) == []
+
+
+class TestGoldenFleetObservability:
+    def test_tracer_changes_no_simulated_timestamp(self):
+        bare = _run_golden_fleet()
+        traced = _run_golden_fleet(Tracer())
+        ka = [(r.req_id, r.node, r.hot_tokens, r.hit_rate, r.ttft_s,
+               r.bytes_total) for r in bare.records]
+        kb = [(r.req_id, r.node, r.hot_tokens, r.hit_rate, r.ttft_s,
+               r.bytes_total) for r in traced.records]
+        assert ka == kb
+        assert bare.global_chunks == traced.global_chunks
+
+    def test_attribution_identity_within_1e6(self):
+        tr = Tracer()
+        res = _run_golden_fleet(tr)
+        attrs = attribute_trace(tr)
+        done = [r for r in res.records if r.done]
+        assert len(attrs) == len(done) > 0
+        assert check_identity(attrs, tol=1e-6) < 1e-6
+
+    def test_per_node_tracks_and_route_instants(self):
+        tr = Tracer()
+        res = _run_golden_fleet(tr)
+        tracks = set(tr.tracks())
+        prefixes = {t.split("/", 1)[0] for t in tracks if "/" in t}
+        assert {"n0", "n1"} <= prefixes or {"n0"} <= prefixes
+        routes = tr.instants("fleet/router", "route")
+        assert len(routes) == len(res.records)
+        assert {i.args["node"] for i in routes} \
+            <= {0, 1}
+        # each request's spans live on its owning node's track
+        for r in res.records:
+            if r.done:
+                assert tr.spans(f"n{r.node}/{r.req_id}", "serve")
+
+
+# ---------------------------------------------------------------------------
+# cluster.metrics edge cases (documented in its module docstring)
+# ---------------------------------------------------------------------------
+class TestClusterMetricsEdges:
+    def test_summarize_empty_yields_nan_percentiles_zero_makespan(self):
+        m = summarize([])
+        assert m.n == 0 and m.makespan_s == 0.0
+        for v in (m.ttft_p50_s, m.ttft_p95_s, m.ttft_p99_s, m.ttft_mean_s,
+                  m.goodput_rps):
+            assert math.isnan(v)
+        assert m.total_ttft_s == 0.0 and m.queue_total_s == 0.0
+
+    def test_percentile_empty_is_nan(self):
+        assert math.isnan(percentile([], 0.5))
+
+    def test_nearest_rank_p99_equals_max_below_100_samples(self):
+        """Nearest-rank: the ceil(0.99 n)-th order statistic IS the max for
+        every n < 100 — tail percentiles need >= 100 samples to separate
+        from the max (documented in `cluster.metrics`)."""
+        for n in (1, 5, 50, 99):
+            xs = [float(i) for i in range(n)]
+            assert percentile(xs, 0.99) == max(xs)
+        xs = [float(i) for i in range(100)]
+        assert percentile(xs, 0.99) == 98.0  # first n where p99 < max
+
+    def test_zero_makespan_goodput_is_nan_not_inf(self):
+        from repro.cluster.metrics import RequestRecord
+        rec = RequestRecord("r0", 4096, 0.5, arrival_s=1.0, admit_s=1.0,
+                            flow_done_s=1.0, prefill_done_s=1.0)
+        m = summarize([rec])
+        assert m.n == 1 and m.makespan_s == 0.0
+        assert math.isnan(m.goodput_rps)
+        assert m.ttft_p50_s == 0.0  # percentiles stay defined
+
+
+# ---------------------------------------------------------------------------
+# Replanner history records as trace instants
+# ---------------------------------------------------------------------------
+class TestReplanTracing:
+    def test_replans_emit_instants_matching_history(self):
+        from repro.core.compute_model import PaperComputeModel
+        from repro.core.simulator import ServingSimulator
+        from repro.core.transport import S3_RDMA_AGG
+        from repro.hybrid.policy import HybridReplanner
+        compute = PaperComputeModel()
+        spec = ServingSimulator().kv_spec(64)
+        rep = HybridReplanner(compute=compute, profile=S3_RDMA_AGG, spec=spec)
+        tr = Tracer()
+        sim = ClusterSim(cap_bps=2 * GBPS, replanner=rep, tracer=tr)
+        sim.run([TraceRequest("r0", 1.0, 16384, 0.875)])
+        insts = tr.instants("pool", "replan")
+        assert len(insts) == len(rep.history) == 1
+        rec = rep.history[0]
+        assert insts[0].t == rec.t_s == 1.0
+        assert insts[0].args["req_id"] == rec.req_id == "r0"
+        assert insts[0].args["fetch_chunks"] == rec.fetch_chunks
+        assert insts[0].args["offered_rate"] == rec.offered_rate

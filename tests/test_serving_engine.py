@@ -277,3 +277,54 @@ class TestFallbacks:
         r = engine.submit(prompt, "b")
         # match would be 32 tokens; engine must keep >= 1 suffix token
         assert r.matched_tokens < 32 and r.matched_tokens == 24
+
+
+class TestStatsRegistry:
+    def test_stats_live_on_shared_registry(self):
+        engine, *_ = _mk_engine()
+        snap = engine.metrics.snapshot()
+        assert "engine.requests" in snap["counters"]
+        assert "orch.hits" in snap["counters"]
+        assert engine.metrics is engine.orch.metrics
+
+    def test_concurrent_serves_never_tear_paired_counters(self):
+        """`prefix_tokens_reused` and `tokens_computed` are updated by one
+        atomic StatGroup.add per request, so every concurrent snapshot must
+        see their sum at a whole-prompt multiple — a torn read would land
+        mid-request."""
+        import threading
+
+        engine, *_ = _mk_engine()
+        L = 32  # every prompt the same length -> sum % L == 0 invariant
+        rng = np.random.default_rng(21)
+        prompts = [rng.integers(0, 200, size=L) for _ in range(4)]
+        for i, p in enumerate(prompts):
+            engine.submit(p, f"warm{i}")  # cold pass: computed == L
+
+        torn, stop = [], threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                s = engine.stats.snapshot()
+                if (s["prefix_tokens_reused"] + s["tokens_computed"]) % L:
+                    torn.append(s)
+
+        rd = threading.Thread(target=reader)
+        rd.start()
+
+        def worker(prompt, wid):
+            for j in range(3):
+                engine.submit(prompt, f"w{wid}.{j}")
+
+        ws = [threading.Thread(target=worker, args=(p, i))
+              for i, p in enumerate(prompts)]
+        for w in ws:
+            w.start()
+        for w in ws:
+            w.join()
+        stop.set()
+        rd.join()
+        assert not torn, f"torn snapshots observed: {torn[:3]}"
+        s = engine.stats.snapshot()
+        assert s["requests"] == 16
+        assert s["prefix_tokens_reused"] + s["tokens_computed"] == 16 * L
