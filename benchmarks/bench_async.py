@@ -1,0 +1,182 @@
+"""Async serving-engine benchmark: TTFT percentiles under Poisson load.
+
+`bench_cluster` replays Poisson traces through the discrete-event simulator
+alone; this benchmark drives the same arrival pattern through the *real*
+`AsyncEngine` — actual JAX prefill compute, real bytes through the object
+store, multiple in-flight layerwise fetches sharing one `BandwidthPool` —
+and cross-checks every request's virtual-clock timeline against a
+`ClusterSim` run of the equivalent trace (the conformance oracle,
+DESIGN.md §Async-engine).  Reported per load:
+
+  serve() wall time, virtual TTFT p50/p95/p99, peak concurrent transfers,
+  and the max |engine - sim| timestamp divergence (must be ~0).
+
+Run standalone:  PYTHONPATH=src python benchmarks/bench_async.py [--smoke]
+                 [--trace PATH]
+
+``--trace PATH`` additionally replays the smoke workload once with a tracer
+attached and writes the span timeline as Perfetto-loadable Chrome trace
+JSON (validated before writing).  The engine emits the same span vocabulary
+as the simulator, so the export is interchangeable with bench_cluster's.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster import ClusterSim, TraceRequest
+from repro.configs import get_smoke_config
+from repro.core import Gateway, InMemoryStore, Policy, RadixIndex
+from repro.core.compute_model import PaperComputeModel
+from repro.core.scheduler import BandwidthPool
+from repro.core.transport import S3_RDMA_AGG, VirtualClock
+from repro.models import build_model
+from repro.serving import (AsyncEngine, AsyncRequest, ModelRunner,
+                           Orchestrator, ServingEngine)
+
+try:  # runnable both as a package module and as a script
+    from .common import row
+except ImportError:  # pragma: no cover - script mode
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    from common import row
+
+G = 8
+WARM_CHUNKS = 4
+MAX_FLOWS = 3
+
+
+@lru_cache(maxsize=1)
+def _stack():
+    cfg = get_smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    spec = cfg.kv_spec(G, dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize,
+                       codec="identity")
+    compute = PaperComputeModel(num_layers=spec.num_layers)
+    return model, params, spec, compute, ModelRunner(model, params)
+
+
+def _workload(n: int, gap_ms: float, seed: int):
+    """n-1 warm requests + 1 cold recompute, Poisson inter-arrivals."""
+    rng = np.random.default_rng(seed)
+    rnd = random.Random(seed)
+    warm_ctx = WARM_CHUNKS * G + G // 2
+    t, trace, prompts = 0.0, [], []
+    for i in range(n):
+        if i == n // 2:  # one cold request mid-trace (disjoint alphabet)
+            prompt = rng.integers(200, 250, size=warm_ctx + 4)
+            trace.append(TraceRequest(f"a{i}", t, len(prompt), 0.0,
+                                      chunk_tokens=G))
+        else:
+            prompt = rng.integers(0, 200, size=warm_ctx)
+            trace.append(TraceRequest(
+                f"a{i}", t, warm_ctx, WARM_CHUNKS * G / warm_ctx,
+                chunk_tokens=G))
+        prompts.append(prompt)
+        t += rnd.expovariate(1.0 / (gap_ms * 1e-3))
+    return trace, prompts
+
+
+def _serve(n: int, gap_ms: float, seed: int = 0, tracer=None):
+    """Serve one Poisson workload; returns (results, engine, trace, cap)."""
+    model, params, spec, compute, runner = _stack()
+    warm_ctx = WARM_CHUNKS * G + G // 2
+    # cap sized so 3+ concurrent flows contend (2 flows fit stall-free)
+    cap = (2.0 * WARM_CHUNKS * spec.mean_wire_layer_bytes
+           / compute.layer_compute_s(warm_ctx, WARM_CHUNKS * G / warm_ctx))
+    pool = BandwidthPool(cap, Policy.CAL_STALL_OPT)
+    if tracer is not None:
+        pool.tracer = tracer
+    orch = Orchestrator(RadixIndex(G), Gateway(InMemoryStore()), spec,
+                        theta_bytes=0, pool=pool, clock=VirtualClock(),
+                        tracer=tracer)
+    seq = ServingEngine(model, params, orch, runner=runner)
+    trace, prompts = _workload(n, gap_ms, seed)
+    for tr, prompt in zip(trace, prompts):
+        if tr.cached_tokens:
+            seq.submit(prompt[:tr.cached_tokens], req_id="w" + tr.req_id)
+    eng = AsyncEngine(model, params, orch, compute=compute,
+                      profile=S3_RDMA_AGG, session_setup=True,
+                      max_flows=MAX_FLOWS, runner=runner, tracer=tracer)
+    reqs = [AsyncRequest(tr.req_id, tuple(map(int, p)), tr.arrival_s)
+            for tr, p in zip(trace, prompts)]
+    t0 = time.perf_counter()
+    results = eng.serve(reqs)
+    wall = time.perf_counter() - t0
+    return results, eng, trace, cap, wall
+
+
+def _conformance(results, trace, cap: float) -> float:
+    """Max |engine - sim| over admit/flow_done/prefill_done, all requests."""
+    _, _, spec, compute, _ = _stack()
+    sim = ClusterSim(cap_bps=cap, policy=Policy.CAL_STALL_OPT,
+                     compute=compute, profile=S3_RDMA_AGG, spec=spec,
+                     mode="layerwise", session_setup=True,
+                     max_flows=MAX_FLOWS)
+    by = sim.run(trace).by_id()
+    diff = 0.0
+    for rid, r in results.items():
+        s = by[rid]
+        diff = max(diff, abs(r.record.admit_s - s.admit_s),
+                   abs(r.record.flow_done_s - s.flow_done_s),
+                   abs(r.record.prefill_done_s - s.prefill_done_s))
+    return diff
+
+
+def run_load(n: int, gap_ms: float, seed: int = 0) -> list[str]:
+    results, eng, trace, cap, wall = _serve(n, gap_ms, seed=seed)
+    ttfts = np.array([r.record.ttft_s for r in results.values()])
+    p50, p95, p99 = np.percentile(ttfts, [50, 95, 99])
+    diff = _conformance(results, trace, cap)
+    return [row(
+        f"async_engine/poisson_n{n}_gap{gap_ms:g}ms", wall * 1e6,
+        f"ttft_p50_ms={p50*1e3:.1f};ttft_p95_ms={p95*1e3:.1f};"
+        f"ttft_p99_ms={p99*1e3:.1f};peak_transfers={eng.peak_transfers};"
+        f"sim_max_diff_s={diff:.2e}")]
+
+
+def run(smoke: bool = False) -> list[str]:
+    if smoke:
+        return run_load(6, 2.0)
+    rows = []
+    for n, gap_ms in ((10, 1.0), (10, 4.0)):  # heavy / moderate overlap
+        rows.extend(run_load(n, gap_ms))
+    return rows
+
+
+def export_trace(path: str, n: int = 6, gap_ms: float = 2.0,
+                 seed: int = 0) -> None:
+    """One traced smoke replay -> validated Chrome trace JSON."""
+    from repro.obs import Tracer, assert_valid_chrome_trace, write_chrome_trace
+
+    tracer = Tracer()
+    _serve(n, gap_ms, seed=seed, tracer=tracer)
+    assert_valid_chrome_trace(write_chrome_trace(tracer, path))
+    print(f"# trace: {len(tracer)} events -> {path}", flush=True)
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    trace_path = None
+    if "--trace" in argv:
+        i = argv.index("--trace")
+        if i + 1 >= len(argv):
+            print("--trace requires a PATH argument", file=sys.stderr)
+            return 2
+        trace_path = argv[i + 1]
+    print("name,us_per_call,derived")
+    for line in run(smoke=smoke):
+        print(line, flush=True)
+    if trace_path is not None:
+        export_trace(trace_path)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_bandwidth_sensitivity Fig 14 + Fig 15 (caps and rate sweeps)
   bench_scheduler             Fig 16 + Tables A9/A12 (multi-tenant policies)
   bench_cluster               §5.7 under Poisson arrivals (event-driven)
+  bench_async                 real async engine under Poisson arrivals vs sim oracle
   bench_granularity           Table A6 + Fig 3 (recompute vs granularity)
   bench_hybrid                compute-or-load crossover (Cake-style sweep)
   bench_codec                 KV wire codecs (DESIGN.md §Codec): bytes/TTFT/accuracy
@@ -27,16 +28,17 @@ from __future__ import annotations
 import sys
 import traceback
 
-from . import (bench_aggregation, bench_bandwidth_sensitivity, bench_cluster,
-               bench_codec, bench_engine, bench_fleet, bench_granularity,
-               bench_hybrid, bench_kernels, bench_overlap,
+from . import (bench_aggregation, bench_async, bench_bandwidth_sensitivity,
+               bench_cluster, bench_codec, bench_engine, bench_fleet,
+               bench_granularity, bench_hybrid, bench_kernels, bench_overlap,
                bench_request_overhead, bench_scheduler, bench_transport,
                bench_ttft)
 
 MODULES = [bench_transport, bench_request_overhead, bench_aggregation,
            bench_overlap, bench_ttft, bench_bandwidth_sensitivity,
-           bench_scheduler, bench_cluster, bench_granularity, bench_hybrid,
-           bench_codec, bench_fleet, bench_kernels, bench_engine]
+           bench_scheduler, bench_cluster, bench_async, bench_granularity,
+           bench_hybrid, bench_codec, bench_fleet, bench_kernels,
+           bench_engine]
 
 
 def _short_name(mod) -> str:

@@ -35,6 +35,7 @@ class HybridPlan:
     delivery: Optional[Delivery]
     rate: Optional[float]
     hedged: bool = False
+    req_id: str = "req"
     fetch_chunks: int = 0
     split: Optional[HybridSplit] = None
 
@@ -51,4 +52,5 @@ def fetch_span_plan(plan: HybridPlan, max_chunks: int, spec: KVSpec
     match = dataclasses.replace(plan.match,
                                 chunk_keys=plan.match.chunk_keys[:m],
                                 matched_tokens=m * spec.chunk_tokens)
-    return TransferPlan(match, Delivery.LAYERWISE, plan.rate, plan.hedged)
+    return TransferPlan(match, Delivery.LAYERWISE, plan.rate, plan.hedged,
+                        req_id=getattr(plan, "req_id", "req"))

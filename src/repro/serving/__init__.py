@@ -1,8 +1,12 @@
-from .engine import EngineStats, RequestResult, ServingEngine
+from .async_engine import AsyncEngine, AsyncRequest, AsyncResult
+from .batching import ContinuousBatcher, SlotRequest
+from .engine import EngineStats, ModelRunner, RequestResult, ServingEngine
 from .kv_chunks import (cache_to_chunks, chunks_from_store, layer_payload_to_kv,
                         prefix_kv_from_payloads)
 from .orchestrator import Orchestrator, TransferPlan
 
-__all__ = ["EngineStats", "Orchestrator", "RequestResult", "ServingEngine",
-           "TransferPlan", "cache_to_chunks", "chunks_from_store",
-           "layer_payload_to_kv", "prefix_kv_from_payloads"]
+__all__ = ["AsyncEngine", "AsyncRequest", "AsyncResult", "ContinuousBatcher",
+           "EngineStats", "ModelRunner", "Orchestrator", "RequestResult",
+           "ServingEngine", "SlotRequest", "TransferPlan", "cache_to_chunks",
+           "chunks_from_store", "layer_payload_to_kv",
+           "prefix_kv_from_payloads"]

@@ -30,12 +30,14 @@ class SlotRequest:
 class ContinuousBatcher:
     """Decode across ``num_slots`` concurrent requests with one jitted step."""
 
-    def __init__(self, model: Model, params, num_slots: int, max_seq: int) -> None:
+    def __init__(self, model: Model, params, num_slots: int, max_seq: int,
+                 eos_id: Optional[int] = None) -> None:
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.num_slots = num_slots
         self.max_seq = max_seq
+        self.eos_id = eos_id  # None => no EOS convention (length-only exit)
         self.cache = model.init_cache(num_slots, max_seq)
         self.pos = np.zeros((num_slots,), np.int32)
         self.cur = np.zeros((num_slots,), np.int32)
@@ -83,8 +85,14 @@ class ContinuousBatcher:
             self.pos[s] += 1
             self.cur[s] = nxt[s]
             req.tokens_out.append(int(nxt[s]))
+            # Exit on EOS or length.  The length bound compares the *next*
+            # decode's write position against the cache: position `pos` is
+            # writable while pos < max_seq, so the last cache slot
+            # (max_seq - 1) stays usable — `pos + 1 >= max_seq` here would
+            # retire the slot one token early.
             if (len(req.tokens_out) >= req.max_new_tokens
-                    or self.pos[s] + 1 >= self.max_seq):
+                    or (self.eos_id is not None and int(nxt[s]) == self.eos_id)
+                    or self.pos[s] >= self.max_seq):
                 req.done = True
                 finished.append(req)
                 self.active[s] = None

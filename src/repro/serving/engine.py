@@ -78,34 +78,20 @@ def EngineStats(registry: Optional[MetricsRegistry] = None):
     return (registry or MetricsRegistry()).group("engine", _ENGINE_FIELDS)
 
 
-class ServingEngine:
-    def __init__(self, model: Model, params, orch: Orchestrator, *,
-                 max_decode_len: int = 64, sync_commit: bool = True,
-                 metrics: Optional[MetricsRegistry] = None,
-                 tracer=None) -> None:
+class ModelRunner:
+    """The jitted callables of one (model, params) pair.
+
+    Extracted from `ServingEngine` so the sequential engine and the
+    continuous-batching `serving.async_engine.AsyncEngine` drive the SAME
+    compiled functions — bit-identical logits across serving paths is then a
+    property of the plan, not of which engine executed it.  Stateless beyond
+    the compilation caches, so one runner may back any number of engines.
+    """
+
+    def __init__(self, model: Model, params) -> None:
         self.model = model
         self.params = params
-        self.orch = orch
-        self.cfg = model.cfg
-        self.spec = orch.spec
-        self.sync_commit = sync_commit
-        self.max_decode_len = max_decode_len
-        # one registry per serving stack: default to the orchestrator's so
-        # engine + orch counters snapshot as a single consistent cut
-        self.metrics = metrics if metrics is not None else orch.metrics
-        self.stats = EngineStats(self.metrics)
-        # wall-clock tracer (obs.trace.Tracer); shared with the orchestrator
-        # unless the caller splits them.  Nullable: `if tracer is not None`
-        # guards keep the uninstrumented path at one attribute test.
-        self.tracer = tracer if tracer is not None else orch.tracer
-        self._layerwise_ok = (self.cfg.family in ("dense", "vlm")
-                              or (self.cfg.family == "moe"
-                                  and self.cfg.moe_every == 1))
-        self._build_fns()
-
-    # ------------------------------------------------------------------
-    def _build_fns(self):
-        cfg = self.cfg
+        self.cfg = cfg = model.cfg
 
         def embed_fn(embed_p, tokens, positions):
             del positions
@@ -133,16 +119,62 @@ class ServingEngine:
         self._layer = jax.jit(layer_fn)
         self._layer_nopre = jax.jit(layer_fn_nopre)
         self._final = jax.jit(final_fn)
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b))
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b))
         self._prefill_prefix = jax.jit(
-            lambda p, b, pk, n: self.model.prefill(p, b, pk, n),
+            lambda p, b, pk, n: model.prefill(p, b, pk, n),
             static_argnames=("n",))
         self._decode = jax.jit(lambda p, c, t, pos:
-                               self.model.decode_step(p, c, t, pos))
+                               model.decode_step(p, c, t, pos))
 
-    def _layer_params(self, l: int):
+    def layer_params(self, l: int):
         return jax.tree.map(lambda a: a[l], self.params["layers"])
+
+    def payloads_to_prefix(self, payloads, n_chunks: int, spec):
+        act = jnp.dtype(self.cfg.compute_dtype)
+        ks, vs = [], []
+        for layer, p in enumerate(payloads):
+            k, v = layer_payload_to_kv(p, n_chunks, spec, act, layer)
+            ks.append(k)
+            vs.append(v)
+        return jnp.asarray(
+            np.stack([np.stack(ks), np.stack(vs)], axis=1))[:, :, None]
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, orch: Orchestrator, *,
+                 max_decode_len: int = 64, sync_commit: bool = True,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None, runner: Optional[ModelRunner] = None) -> None:
+        self.model = model
+        self.params = params
+        self.orch = orch
+        self.cfg = model.cfg
+        self.spec = orch.spec
+        self.sync_commit = sync_commit
+        self.max_decode_len = max_decode_len
+        # one registry per serving stack: default to the orchestrator's so
+        # engine + orch counters snapshot as a single consistent cut
+        self.metrics = metrics if metrics is not None else orch.metrics
+        self.stats = EngineStats(self.metrics)
+        # wall-clock tracer (obs.trace.Tracer); shared with the orchestrator
+        # unless the caller splits them.  Nullable: `if tracer is not None`
+        # guards keep the uninstrumented path at one attribute test.
+        self.tracer = tracer if tracer is not None else orch.tracer
+        self._layerwise_ok = (self.cfg.family in ("dense", "vlm")
+                              or (self.cfg.family == "moe"
+                                  and self.cfg.moe_every == 1))
+        # all jitted callables live on the (shareable) runner; the engine
+        # keeps flat aliases so call sites read as before
+        self.runner = runner if runner is not None else ModelRunner(model,
+                                                                    params)
+        self._embed = self.runner._embed
+        self._layer = self.runner._layer
+        self._layer_nopre = self.runner._layer_nopre
+        self._final = self.runner._final
+        self._prefill = self.runner._prefill
+        self._prefill_prefix = self.runner._prefill_prefix
+        self._decode = self.runner._decode
+        self._layer_params = self.runner.layer_params
 
     # ------------------------------------------------------------------
     def submit(self, tokens: np.ndarray, req_id: str = "req",
@@ -151,7 +183,10 @@ class ServingEngine:
         """Serve one request: match -> (fetch | recompute) -> prefill ->
         greedy decode -> commit fresh chunks."""
         tokens = np.asarray(tokens, dtype=np.int32)
-        self.stats.requests += 1
+        # `stats.requests += 1` would be a locked read THEN a locked write —
+        # two acquisitions, so concurrent submits can lose increments; add()
+        # applies the delta under one acquisition
+        self.stats.add(requests=1)
         if self.tracer is not None:
             with self.tracer.span(req_id, "plan", cat="engine") as a:
                 plan = self.orch.plan(tokens, layer_compute_hint_s,
@@ -160,10 +195,10 @@ class ServingEngine:
         else:
             plan = self.orch.plan(tokens, layer_compute_hint_s, req_id=req_id)
         match = plan.match
-        # always keep >= 1 suffix token to produce next-token logits
+        # the orchestrator already trimmed full-prompt matches (>= 1 suffix
+        # token stays), so the plan's chunk count IS the reusable count and
+        # pool demand was registered for exactly these bytes
         n_chunks = match.num_chunks
-        while n_chunks * self.spec.chunk_tokens >= len(tokens):
-            n_chunks -= 1
         P = n_chunks * self.spec.chunk_tokens
         use_cache = plan.delivery is not None and n_chunks > 0
 
@@ -184,6 +219,11 @@ class ServingEngine:
             result = self._serve_layerwise(tokens, plan, n_chunks, P, req_id)
         else:
             result = self._serve_chunkwise(tokens, plan, n_chunks, P, req_id)
+
+        # the fetch is over: retire the pool flow, or every served request
+        # would keep holding (and shrinking) the shared bandwidth forever
+        if plan.delivery is not None:
+            self.orch.release(req_id)
 
         # one atomic add: a concurrent snapshot must never see the reused
         # count without the computed count (the torn-snapshot invariant —
@@ -338,13 +378,7 @@ class ServingEngine:
         return dataclasses.replace(plan, match=m)
 
     def _payloads_to_prefix(self, payloads, n_chunks):
-        act = jnp.dtype(self.cfg.compute_dtype)
-        ks, vs = [], []
-        for layer, p in enumerate(payloads):
-            k, v = layer_payload_to_kv(p, n_chunks, self.spec, act, layer)
-            ks.append(k)
-            vs.append(v)
-        return jnp.asarray(np.stack([np.stack(ks), np.stack(vs)], axis=1))[:, :, None]
+        return self.runner.payloads_to_prefix(payloads, n_chunks, self.spec)
 
     def _commit(self, tokens, cache, req_id="req"):
         if not self.sync_commit:
@@ -359,7 +393,7 @@ class ServingEngine:
             keys_all = chunk_keys(tokens, self.spec.chunk_tokens)
             objs = cache_to_chunks(np.asarray(cache), keys_all, self.spec)
             new = self.orch.commit(tokens, objs)
-        self.stats.commits += len(new)
+        self.stats.add(commits=len(new))
 
     def _greedy_decode(self, result, tokens, max_new_tokens) -> list[int]:
         cache = self._last_cache

@@ -22,7 +22,7 @@ from repro.core import (Delivery, FlowRequest, Gateway, KVSpec, Policy,
                         RadixIndex, make_descriptor, select_mode)
 from repro.core.aggregation import DEFAULT_THETA_BYTES, AggResult
 from repro.core.scheduler import allocate
-from repro.core.types import MatchResult
+from repro.core.types import MatchResult, Timing
 from repro.hybrid.executor import HybridPlan, fetch_span_plan
 from repro.obs.metrics import MetricsRegistry
 
@@ -36,6 +36,7 @@ class TransferPlan:
     delivery: Optional[Delivery]  # None => recompute fallback (no fetch)
     rate: Optional[float]  # allocated bandwidth (None = unthrottled)
     hedged: bool = False
+    req_id: str = "req"  # pool flow id (release() retires it after serving)
 
 
 @dataclasses.dataclass
@@ -108,7 +109,7 @@ class Orchestrator:
 
     def _on_index_evict(self, key: bytes) -> None:
         self.gateway.delete(key)
-        self.stats["evicted_objects"] += 1
+        self.stats.add(evicted_objects=1)
 
     # -- planning ------------------------------------------------------------
     def plan(self, tokens, layer_compute_s: float,
@@ -129,9 +130,20 @@ class Orchestrator:
               active: Optional[list[FlowRequest]] = None,
               req_id: str = "req") -> TransferPlan:
         match = self.index.match(tokens)
+        # Always keep >= 1 suffix token (the engine must compute next-token
+        # logits), so a full-prompt match is trimmed *here*, before bandwidth
+        # demand is registered — otherwise the pool water-fills against
+        # chunks that will never cross the wire (stale-demand bug).
+        n = match.num_chunks
+        while n > 0 and n * self.spec.chunk_tokens >= len(tokens):
+            n -= 1
+        if n != match.num_chunks:
+            match = dataclasses.replace(
+                match, chunk_keys=match.chunk_keys[:n],
+                matched_tokens=n * self.spec.chunk_tokens)
         if match.num_chunks < self.min_hit_chunks:
-            self.stats["misses" if not match.is_hit else "fallbacks"] += 1
-            return TransferPlan(match, None, None)
+            self.stats.add(**{"misses" if not match.is_hit else "fallbacks": 1})
+            return TransferPlan(match, None, None, req_id=req_id)
         # Mode selection and bandwidth demand follow the bytes that actually
         # cross the wire — the codec-encoded size (DESIGN.md §Codec).
         W = self.spec.matched_wire_bytes(match.num_chunks)
@@ -153,7 +165,7 @@ class Orchestrator:
                     self.pool.replanner.register(req_id, len(tokens))
                 self.pool.submit(me)
                 rate = self.pool.reallocate(now)[req_id]
-                self.stats["reallocs"] += 1
+                self.stats.add(reallocs=1)
             else:
                 flows = [me, *(active or [])]
                 rate = allocate(flows, self.cap, self.policy, self.margin)[req_id]
@@ -167,16 +179,31 @@ class Orchestrator:
                 # future tenant's allocation forever.
                 if self.pool is not None:
                     self.pool.complete(req_id)
-                self.stats["fallbacks"] += 1
-                return TransferPlan(match, None, None)
+                self.stats.add(fallbacks=1)
+                return TransferPlan(match, None, None, req_id=req_id)
             if not split.is_pure_fetch:
-                self.stats["hits"] += 1
-                self.stats["hybrid_splits"] += 1
+                if self.pool is not None:
+                    # Only the fetch-span crosses the wire, so the pool must
+                    # water-fill against the split's bytes: the full match's
+                    # demand would shrink every other tenant for bytes the
+                    # planner decided to recompute (stale-demand, hybrid
+                    # edition).  complete+resubmit restarts the flow with the
+                    # reduced demand in one reallocation round.
+                    now = self.clock.now() if self.clock is not None else 0.0
+                    self.pool.complete(req_id)
+                    self.pool.submit(FlowRequest(
+                        req_id, split.bytes_per_layer, split.layer_compute_s,
+                        self.spec.num_layers))
+                    rate = self.pool.reallocate(now)[req_id]
+                    self.stats.add(reallocs=1)
+                self.stats.add(hits=1, hybrid_splits=1)
                 return HybridPlan(match, Delivery.LAYERWISE, rate,
                                   hedged=self.hedge,
-                                  fetch_chunks=split.fetch_chunks, split=split)
-        self.stats["hits"] += 1
-        return TransferPlan(match, delivery, rate, hedged=self.hedge)
+                                  fetch_chunks=split.fetch_chunks, split=split,
+                                  req_id=req_id)
+        self.stats.add(hits=1)
+        return TransferPlan(match, delivery, rate, hedged=self.hedge,
+                            req_id=req_id)
 
     # -- execution ------------------------------------------------------------
     def fetch(self, plan: TransferPlan) -> AggResult:
@@ -194,14 +221,38 @@ class Orchestrator:
                                                rate_limit=plan.rate)
         finally:
             self.index.unpin(plan.match.chunk_keys)
-        # straggler inflation (and hedging) applies to the storage events
+        # Straggler inflation (and hedging) applies to the storage tier as a
+        # whole: the layer-ready events AND the reported latency breakdown
+        # must scale together, or the chunkwise TTFT (completion_s derives
+        # from events) and the Fig. 10 splits (timing) would disagree about
+        # how slow the slow replica was.
         infl = self.straggler.sample(plan.hedged)
         if plan.hedged:
-            self.stats["hedged"] += 1
+            self.stats.add(hedged=1)
         if infl != 1.0:
             for e in res.events:
                 e.t_ready_s *= infl
+            res.timing = Timing(res.timing.control_plane_s * infl,
+                                res.timing.storage_s * infl,
+                                res.timing.network_s * infl)
         return res
+
+    # -- completion -----------------------------------------------------------
+    def release(self, req_id: str) -> None:
+        """Retire a served request's pool flow (and its replanner context).
+
+        `plan` joins the shared pool at arrival time; the flow must leave at
+        completion time or it holds — and shrinks — every future tenant's
+        water-filled share forever (the pool-flow leak).  The bandwidth
+        returns at the next `reallocate`, matching the simulator's FLOW_DONE
+        handling.  Safe to call for plans that never joined the pool
+        (chunkwise / recompute / no-pool): `BandwidthPool.complete` is a
+        no-op for unknown ids.
+        """
+        if self.pool is not None:
+            self.pool.complete(req_id)
+            if hasattr(self.pool.replanner, "unregister"):
+                self.pool.replanner.unregister(req_id)
 
     # -- commit (write-behind of freshly produced chunks) ---------------------
     def commit(self, tokens, chunk_objects: dict[bytes, bytes]) -> list[bytes]:

@@ -328,3 +328,134 @@ class TestStatsRegistry:
         s = engine.stats.snapshot()
         assert s["requests"] == 16
         assert s["prefix_tokens_reused"] + s["tokens_computed"] == 16 * L
+
+
+def _mk_pool_engine(cap_bps=None, theta=0, sigma=0.0):
+    """Engine whose orchestrator shares a BandwidthPool on a virtual clock —
+    the concurrent-serving configuration (DESIGN.md §Async-engine).
+
+    ``cap_bps=None`` sizes the cap at 1.5x one 5-chunk flow's zero-stall
+    rate: a lone tenant gets its full r*, but any *leaked* second flow
+    forces a genuine water-fill split — exactly the contention regime where
+    pool-lifecycle bugs become visible as rate changes.
+    """
+    from repro.core.scheduler import BandwidthPool
+    from repro.core.transport import VirtualClock
+    from repro.obs import Tracer
+
+    cfg, model, params = _model_and_params("qwen3-0.6b")
+    spec = cfg.kv_spec(G, dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize,
+                       codec="identity")
+    if cap_bps is None:
+        cap_bps = 1.5 * (5 * spec.mean_wire_layer_bytes) / 1e-3
+    pool = BandwidthPool(cap_bps, Policy.CAL_STALL_OPT)
+    tracer = Tracer()
+    orch = Orchestrator(RadixIndex(G), Gateway(InMemoryStore()), spec,
+                        theta_bytes=theta, pool=pool, clock=VirtualClock(),
+                        straggler=StragglerModel(sigma=sigma, seed=1),
+                        tracer=tracer)
+    return ServingEngine(model, params, orch), pool, tracer
+
+
+class TestPoolFlowLifecycle:
+    """Satellite: a served request's pool flow must retire (release), or it
+    permanently shrinks every future tenant's allocation."""
+
+    def test_sequential_warm_submits_get_equal_rates(self):
+        engine, pool, tracer = _mk_pool_engine()
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, 200, size=48)
+        engine.submit(prompt, "cold")
+        engine.submit(prompt, "warm1")
+        engine.submit(prompt, "warm2")
+        rates = {i.track: i.args["rate"]
+                 for i in tracer.instants(name="plan_decision")
+                 if i.args["rate"] is not None}
+        assert set(rates) == {"warm1", "warm2"}
+        # an idle pool must offer the second tenant exactly what it offered
+        # the first — a leaked warm1 flow would halve warm2's water-fill
+        assert rates["warm2"] == pytest.approx(rates["warm1"], rel=1e-12)
+
+    def test_served_flow_leaves_the_pool(self):
+        engine, pool, _ = _mk_pool_engine()
+        rng = np.random.default_rng(12)
+        prompt = rng.integers(0, 200, size=48)
+        engine.submit(prompt, "cold")
+        engine.submit(prompt, "warm")
+        assert pool.live_ids() == set()
+
+    def test_release_is_noop_without_flow(self):
+        engine, pool, _ = _mk_pool_engine()
+        engine.orch.release("never-submitted")  # must not raise
+        assert pool.live_ids() == set()
+
+
+class TestTrimmedDemand:
+    """Satellite: pool demand must be registered for the *trimmed* chunk
+    count (>= 1 suffix token is always recomputed), not the raw match."""
+
+    def test_full_match_demand_is_trimmed(self):
+        engine, pool, _ = _mk_pool_engine()
+        rng = np.random.default_rng(13)
+        prompt = rng.integers(0, 200, size=4 * G)  # 4 exact chunks
+        engine.submit(prompt, "cold")
+        engine.submit(prompt, "warm")
+        # the raw match is all 4 chunks; only 3 may ever cross the wire
+        fr = pool.flow_request("warm")
+        spec = engine.spec
+        assert fr.total_bytes == pytest.approx(3 * spec.wire_chunk_bytes)
+
+    def test_plan_match_equals_served_chunks(self):
+        engine, pool, tracer = _mk_pool_engine()
+        rng = np.random.default_rng(14)
+        prompt = rng.integers(0, 200, size=4 * G)
+        engine.submit(prompt, "cold")
+        res = engine.submit(prompt, "warm")
+        assert res.matched_tokens == 3 * G
+        inst = [i for i in tracer.instants(name="plan_decision")
+                if i.track == "warm"]
+        assert inst[0].args["matched_chunks"] == 3
+
+
+class TestStragglerConsistency:
+    """Satellite: straggler inflation must scale the layer-ready events and
+    the Timing breakdown together — chunkwise TTFT derives from the events
+    while Fig. 10 splits derive from the timing."""
+
+    def test_chunkwise_completion_matches_timing_total(self):
+        engine, *_ = [*_mk_engine(theta=1 << 60, sigma=0.6)]
+        rng = np.random.default_rng(15)
+        prompt = rng.integers(0, 200, size=40)
+        engine.submit(prompt, "cold")
+        plan = engine.orch.plan(prompt, 1e-3, req_id="w")
+        res = engine.orch.fetch(plan)
+        # batch_get semantics: every event lands at timing.total_s; the
+        # straggler factor must preserve that identity
+        assert res.completion_s == pytest.approx(res.timing.total_s,
+                                                 rel=1e-12)
+
+    def test_layerwise_events_and_timing_scale_by_same_factor(self):
+        engine, *_ = _mk_engine(theta=0, sigma=0.0)
+        rng = np.random.default_rng(16)
+        prompt = rng.integers(0, 200, size=40)
+        engine.submit(prompt, "cold")
+        plan = engine.orch.plan(prompt, 1e-3, req_id="w")
+        base = engine.orch.fetch(plan)
+        engine.orch.straggler = StragglerModel(sigma=0.7, seed=5)
+        slow = engine.orch.fetch(plan)
+        k = slow.events[-1].t_ready_s / base.events[-1].t_ready_s
+        assert k != pytest.approx(1.0)
+        assert slow.timing.total_s == pytest.approx(k * base.timing.total_s,
+                                                    rel=1e-9)
+
+    def test_hedging_still_cuts_the_tail(self):
+        engine, *_ = _mk_engine(theta=1 << 60, sigma=0.6, hedge=True)
+        rng = np.random.default_rng(17)
+        prompt = rng.integers(0, 200, size=40)
+        engine.submit(prompt, "cold")
+        plan = engine.orch.plan(prompt, 1e-3, req_id="w")
+        assert plan.hedged
+        res = engine.orch.fetch(plan)
+        assert res.completion_s == pytest.approx(res.timing.total_s,
+                                                 rel=1e-12)
+        assert engine.orch.stats["hedged"] == 1
