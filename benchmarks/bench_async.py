@@ -12,12 +12,15 @@ DESIGN.md §Async-engine).  Reported per load:
   and the max |engine - sim| timestamp divergence (must be ~0).
 
 Run standalone:  PYTHONPATH=src python benchmarks/bench_async.py [--smoke]
-                 [--trace PATH]
+                 [--trace PATH] [--json PATH]
 
 ``--trace PATH`` additionally replays the smoke workload once with a tracer
 attached and writes the span timeline as Perfetto-loadable Chrome trace
 JSON (validated before writing).  The engine emits the same span vocabulary
 as the simulator, so the export is interchangeable with bench_cluster's.
+``--json PATH`` writes the printed rows as a schema-valid
+``repro-bench-result/v1`` document for the perf-trajectory gate
+(`repro.obs.regress`).
 """
 from __future__ import annotations
 
@@ -41,10 +44,10 @@ from repro.serving import (AsyncEngine, AsyncRequest, ModelRunner,
                            Orchestrator, ServingEngine)
 
 try:  # runnable both as a package module and as a script
-    from .common import row
+    from .common import row, write_json
 except ImportError:  # pragma: no cover - script mode
     sys.path.insert(0, __file__.rsplit("/", 1)[0])
-    from common import row
+    from common import row, write_json
 
 G = 8
 WARM_CHUNKS = 4
@@ -163,16 +166,25 @@ def export_trace(path: str, n: int = 6, gap_ms: float = 2.0,
 
 def main(argv: list[str]) -> int:
     smoke = "--smoke" in argv
-    trace_path = None
-    if "--trace" in argv:
-        i = argv.index("--trace")
-        if i + 1 >= len(argv):
-            print("--trace requires a PATH argument", file=sys.stderr)
-            return 2
-        trace_path = argv[i + 1]
+    trace_path = json_path = None
+    for flag in ("--trace", "--json"):
+        if flag in argv:
+            i = argv.index(flag)
+            if i + 1 >= len(argv):
+                print(f"{flag} requires a PATH argument", file=sys.stderr)
+                return 2
+            if flag == "--trace":
+                trace_path = argv[i + 1]
+            else:
+                json_path = argv[i + 1]
     print("name,us_per_call,derived")
+    lines = []
     for line in run(smoke=smoke):
         print(line, flush=True)
+        lines.append(line)
+    if json_path is not None:
+        write_json(json_path, "bench_async", lines)
+        print(f"# json: {len(lines)} rows -> {json_path}", flush=True)
     if trace_path is not None:
         export_trace(trace_path)
     return 0

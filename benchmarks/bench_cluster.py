@@ -10,7 +10,10 @@ bandwidth pool over time.  Reported per (load, policy):
   ratio, which must stay inside/above the paper's 1.2-1.8x static window.
 
 Run standalone:  PYTHONPATH=src python benchmarks/bench_cluster.py [--smoke]
-                 [--trace PATH]
+                 [--trace PATH] [--json PATH]
+
+``--json PATH`` writes the printed rows as a schema-valid
+``repro-bench-result/v1`` document for `repro.obs.regress`.
 
 ``--trace PATH`` additionally replays the smoke workload once under
 CAL_STALL_OPT with a tracer attached and writes the span timeline as
@@ -28,10 +31,10 @@ from repro.core.scheduler import Policy
 from repro.core.simulator import PAPER_MARGIN_BPS, ServingSimulator, WorkloadRequest
 
 try:  # runnable both as a package module and as a script
-    from .common import row, timeit
+    from .common import row, timeit, write_json
 except ImportError:  # pragma: no cover - script mode
     sys.path.insert(0, __file__.rsplit("/", 1)[0])
-    from common import row, timeit
+    from common import row, timeit, write_json
 
 GBPS = 1e9 / 8
 CAP_BPS = 80 * GBPS  # workload A's cap
@@ -106,16 +109,25 @@ def export_trace(path: str, n: int = 16, rate_rps: float = 1.0,
 
 def main(argv: list[str]) -> int:
     smoke = "--smoke" in argv
-    trace_path = None
-    if "--trace" in argv:
-        i = argv.index("--trace")
-        if i + 1 >= len(argv):
-            print("--trace requires a PATH argument", file=sys.stderr)
-            return 2
-        trace_path = argv[i + 1]
+    trace_path = json_path = None
+    for flag in ("--trace", "--json"):
+        if flag in argv:
+            i = argv.index(flag)
+            if i + 1 >= len(argv):
+                print(f"{flag} requires a PATH argument", file=sys.stderr)
+                return 2
+            if flag == "--trace":
+                trace_path = argv[i + 1]
+            else:
+                json_path = argv[i + 1]
     print("name,us_per_call,derived")
+    lines = []
     for line in run(smoke=smoke):
         print(line, flush=True)
+        lines.append(line)
+    if json_path is not None:
+        write_json(json_path, "bench_cluster", lines)
+        print(f"# json: {len(lines)} rows -> {json_path}", flush=True)
     if trace_path is not None:
         export_trace(trace_path)
     return 0

@@ -18,6 +18,10 @@ Full mode adds the skew sweep (α), the hot-tier capacity frontier, and the
 eviction-policy frontier (LRU/LFU/GDSF/TTL) under tenant churn.
 
 Run standalone:  PYTHONPATH=src python benchmarks/bench_fleet.py [--smoke]
+                 [--json PATH]
+
+``--json PATH`` writes the printed rows as a schema-valid
+``repro-bench-result/v1`` document for `repro.obs.regress`.
 """
 from __future__ import annotations
 
@@ -28,10 +32,10 @@ from repro.fleet import (make_router, tenant_churn_trace,
 from repro.fleet.sim import CacheConfig, FleetSim
 
 try:  # runnable both as a package module and as a script
-    from .common import row, timeit
+    from .common import row, timeit, write_json
 except ImportError:  # pragma: no cover - script mode
     sys.path.insert(0, __file__.rsplit("/", 1)[0])
-    from common import row, timeit
+    from common import row, timeit, write_json
 
 GBPS = 1e9 / 8
 CAP_BPS = 20 * GBPS  # per node: tight enough that wire bytes shape the tail
@@ -149,7 +153,25 @@ def run(smoke: bool = False) -> list[str]:
     return rows
 
 
-if __name__ == "__main__":
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            print("--json requires a PATH argument", file=sys.stderr)
+            return 2
+        json_path = argv[i + 1]
     print("name,us_per_call,derived")
-    for line in run(smoke="--smoke" in sys.argv):
+    lines = []
+    for line in run(smoke=smoke):
         print(line, flush=True)
+        lines.append(line)
+    if json_path is not None:
+        write_json(json_path, "bench_fleet", lines)
+        print(f"# json: {len(lines)} rows -> {json_path}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

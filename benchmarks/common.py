@@ -1,6 +1,9 @@
-"""Shared benchmark helpers: timing + CSV row emission."""
+"""Shared benchmark helpers: timing, CSV row emission, and the versioned
+BENCH_<name>.json result documents the perf-trajectory gate
+(`repro.obs.regress`) diffs across PRs."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Iterable
 
@@ -20,3 +23,13 @@ def timeit(fn: Callable, *, repeat: int = 5, warmup: int = 1) -> float:
 
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+def write_json(path: str, bench: str, lines: Iterable[str]) -> None:
+    """Write the rows a bench printed as a schema-valid
+    ``repro-bench-result/v1`` document (see `repro.obs.regress`)."""
+    from repro.obs.regress import bench_result_from_csv, write_bench_result
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    write_bench_result(path, bench_result_from_csv(bench, lines))

@@ -19,15 +19,23 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
 
 Usage:
   python -m benchmarks.run [--list] [--only <name> [--only <name> ...]]
+                           [--json DIR]
 
 ``--only`` accepts the short module name with or without the ``bench_``
 prefix and may repeat; ``--list`` prints the registered modules and exits.
+``--json DIR`` additionally writes each module's rows as a versioned
+``BENCH_<name>.json`` result document (schema ``repro-bench-result/v1``,
+see `repro.obs.regress`) under DIR — the files the perf-trajectory
+regression gate diffs against the committed baselines in
+``benchmarks/trajectory/``.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
+from . import common
 from . import (bench_aggregation, bench_async, bench_bandwidth_sensitivity,
                bench_cluster, bench_codec, bench_engine, bench_fleet,
                bench_granularity, bench_hybrid, bench_kernels, bench_overlap,
@@ -77,14 +85,35 @@ def _select(argv: list[str]) -> list:
     return picked
 
 
+def _json_dir(argv: list[str]) -> str | None:
+    for i, arg in enumerate(argv):
+        if arg == "--json":
+            if i + 1 >= len(argv):
+                raise SystemExit("--json needs a directory")
+            return argv[i + 1]
+        if arg.startswith("--json="):
+            return arg.split("=", 1)[1]
+    return None
+
+
 def main(argv: list[str] | None = None) -> None:
-    modules = _select(sys.argv[1:] if argv is None else argv)
+    argv = sys.argv[1:] if argv is None else argv
+    modules = _select(argv)
+    json_dir = _json_dir(argv)
+    if json_dir is not None:
+        os.makedirs(json_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
     for mod in modules:
         try:
-            for line in mod.run():
+            lines = list(mod.run())
+            for line in lines:
                 print(line, flush=True)
+            if json_dir is not None:
+                name = _short_name(mod).removeprefix("bench_")
+                path = os.path.join(json_dir, f"BENCH_{name}.json")
+                common.write_json(path, _short_name(mod), lines)
+                print(f"# json: {len(lines)} rows -> {path}", flush=True)
         except Exception:
             failures += 1
             print(f"{mod.__name__},ERROR,", file=sys.stderr)

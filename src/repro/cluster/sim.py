@@ -93,6 +93,7 @@ class _ActiveFlow:
     n_chunks: int = 0
     per_layer: Optional[list[float]] = None  # exact per-layer wire bytes
     wire_from: float = 0.0  # when the wire started serving the next layer
+    flow_in_pending: Optional[str] = None  # pool flow id for the next wire span
 
     def next_threshold(self) -> float:
         if self.chunkwise:
@@ -138,7 +139,9 @@ class ClusterSim:
                  epoch_s: Optional[float] = None,
                  codec: str = "identity",
                  tracer=None,
-                 track_prefix: str = "") -> None:
+                 track_prefix: str = "",
+                 monitor=None,
+                 slo=None) -> None:
         if mode not in ("layerwise", "chunkwise"):
             raise ValueError(f"unknown mode {mode!r}")
         self.compute = compute or PaperComputeModel()
@@ -159,12 +162,22 @@ class ClusterSim:
         # fleet exports one process group per node ("n0/req-3").
         self.tracer = tracer
         self.track_prefix = track_prefix
+        # Live observability (same contract): `monitor` is a nullable
+        # stream-metrics sink (`obs.window.StreamMonitor` shape) fed each
+        # completed request at its prefill-done event time; `slo` is a
+        # nullable `obs.slo.SLOMonitor` evaluated on the same stream.  Both
+        # only *read* event times already computed — zero perturbation.
+        self.monitor = monitor
+        self.slo = slo
+        if slo is not None and getattr(slo, "tracer", None) is None:
+            slo.tracer = tracer
         self.pool: Optional[BandwidthPool] = None
         if cap_bps is not None:
             self.pool = BandwidthPool(cap_bps, policy, margin_bps,
                                       replanner=replanner)
             self.pool.tracer = tracer
             self.pool.trace_track = track_prefix + "pool"
+            self.pool.monitor = monitor
         if replanner is not None and hasattr(replanner, "clock"):
             replanner.clock = self.clock
         if replanner is not None and hasattr(replanner, "tracer") \
@@ -281,6 +294,10 @@ class ClusterSim:
         fl.record.prefill_done_s = ev.time
         if self.tracer is not None:
             self._emit_request_summary(fl, ev.time)
+        if self.monitor is not None:
+            self.monitor.record_request(ev.time, fl.record)
+        if self.slo is not None:
+            self.slo.record_request(ev.time, fl.record)
         if self.replanner is not None and hasattr(self.replanner, "unregister"):
             self.replanner.unregister(ev.req_id)
         if self._closed is not None:
@@ -357,9 +374,14 @@ class ClusterSim:
         for tr in admitted:
             self._start_flow(tr, now, alloc)
         # 5. re-shape surviving flows' rates
+        flow_ids = self.pool.last_flow_ids if self.pool is not None else {}
         for fid, fl in self._active.items():
             if fl.wire_done:
                 continue
+            if fid in flow_ids:
+                # the pool started/reshaped this flow: its next wire span
+                # consumes the flow id (Perfetto causality arrow)
+                fl.flow_in_pending = flow_ids[fid]
             rate = alloc.get(fid) if self.pool is not None else None
             if rate != fl.alloc_rate:
                 fl.alloc_rate = rate
@@ -489,8 +511,12 @@ class ClusterSim:
             fl.wire_done = True
             if self.tracer is not None:
                 trk = self._trk(fid)
+                wire_args = {"bytes": fl.total_bytes}
+                if fl.flow_in_pending is not None:
+                    wire_args["flow_in"] = fl.flow_in_pending
+                    fl.flow_in_pending = None
                 self.tracer.span_at(trk, "wire", fl.wire_from, t, cat="wire",
-                                    bytes=fl.total_bytes)
+                                    **wire_args)
                 self.tracer.span_at(trk, "fetch.pre", t, t + fl.pre_s,
                                     cat="fetch")
                 self.tracer.span_at(trk, "compute", t + fl.pre_s,
@@ -504,8 +530,12 @@ class ClusterSim:
         compute_start = max(ready, fl.finish_prev) if l > 0 else ready
         if self.tracer is not None:
             trk = self._trk(fid)
+            wire_args = {"layer": l, "bytes": fl.per_layer[l]}
+            if fl.flow_in_pending is not None:
+                wire_args["flow_in"] = fl.flow_in_pending
+                fl.flow_in_pending = None
             self.tracer.span_at(trk, "wire", fl.wire_from, t, cat="wire",
-                                layer=l, bytes=fl.per_layer[l])
+                                **wire_args)
             if l > 0 and ready > fl.finish_prev:
                 # compute pipeline idles between finishing layer l-1 and
                 # layer l's payload crossing — the per-layer stall interval

@@ -179,12 +179,20 @@ class BandwidthPool:
         self.epochs = 0
         self.reallocs = 0
         self.replans = 0
-        # Observability (DESIGN.md §Observability): a nullable `obs.Tracer`.
-        # `reallocate`/`start_epoch` emit instants stamped with the caller's
-        # `now` — never a clock read — so attaching a tracer cannot perturb
-        # epoch or event timing.
+        # Observability (DESIGN.md §Observability): a nullable `obs.Tracer`
+        # and a nullable stream monitor (`obs.window.StreamMonitor` shape).
+        # `reallocate`/`start_epoch` emit instants/samples stamped with the
+        # caller's `now` — never a clock read — so attaching either cannot
+        # perturb epoch or event timing.
         self.tracer = None
         self.trace_track = "pool"
+        self.monitor = None
+        # Flow-event causality (Perfetto arrows): every reallocation that
+        # starts or reshapes a flow mints a flow id; the sims attach it as
+        # `flow_in` on the next wire span of that request.  Plain counters —
+        # maintained unconditionally, emitted only when a tracer is attached.
+        self._flow_seq = 0
+        self.last_flow_ids: dict[str, str] = {}
 
     def submit(self, req: FlowRequest) -> None:
         self._pending.append(req)
@@ -287,18 +295,35 @@ class BandwidthPool:
                 alloc = allocate(admitted, self.budget, self.policy, self.margin)
         old = self._flows
         self._flows = {}
+        self.last_flow_ids = {}
         for req in admitted:
             if req.req_id in live_ids:
                 rem = old[req.req_id].remaining_bytes
             else:  # fresh flow (or a finished flow re-submitted: restart it)
                 rem = req.total_bytes
-            self._flows[req.req_id] = _Flow(req, alloc[req.req_id], rem)
+            rate = alloc[req.req_id]
+            prev = old.get(req.req_id)
+            if prev is None or req.req_id not in live_ids \
+                    or rate != prev.rate:
+                # this realloc started or reshaped the flow: mint the flow
+                # id the request's next wire span will consume as `flow_in`
+                self._flow_seq += 1
+                self.last_flow_ids[req.req_id] = \
+                    f"{self.trace_track}:{self._flow_seq}"
+            self._flows[req.req_id] = _Flow(req, rate, rem)
         if self.tracer is not None:
             self.tracer.instant(
                 self.trace_track, "realloc", t=now, cat="pool",
                 live=len(live), fresh=len(fresh), flows=len(self._flows),
                 reallocs=self.reallocs, replans=self.replans,
-                rates={r.req_id: alloc[r.req_id] for r in admitted})
+                rates={r.req_id: alloc[r.req_id] for r in admitted},
+                flow_ids=dict(self.last_flow_ids))
+        if self.monitor is not None:
+            self.monitor.inc("pool.reallocs", now)
+            self.monitor.observe("pool.flows", now, float(len(self._flows)))
+            for req in admitted:
+                self.monitor.observe("pool.alloc_bps", now,
+                                     alloc[req.req_id])
         return alloc
 
     def advance(self, dt: float) -> list[str]:

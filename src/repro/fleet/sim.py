@@ -276,6 +276,8 @@ class FleetSim:
     def __init__(self, num_nodes: int, router: Router, *,
                  cache: Optional[CacheConfig] = None,
                  tracer=None,
+                 monitor=None,
+                 slo=None,
                  **node_kwargs) -> None:
         if num_nodes < 1:
             raise ValueError("need at least one node")
@@ -288,10 +290,22 @@ class FleetSim:
         # Observability: one shared tracer, one track namespace per node
         # ("n0/req-3", "n0/pool", ...) so the Chrome export renders one
         # process group per node.  Purely observational — see ClusterSim.
+        # `monitor` (an `obs.window.StreamMonitor` shape) is `spawn()`ed per
+        # node so each node sketches its own windows independently;
+        # `monitor_rollup()` merges them into the node-order-invariant
+        # global view.  `slo` is fleet-global (one burn-rate evaluation over
+        # all completions) and is shared across nodes unchanged.
         self.tracer = tracer
+        self.monitor = monitor
+        self.slo = slo
+        self.node_monitors = ([monitor.spawn() for _ in range(num_nodes)]
+                              if monitor is not None else None)
         self.nodes: list[FleetNode] = []
         for i in range(num_nodes):
             sim = ClusterSim(tracer=tracer, track_prefix=f"n{i}/",
+                             monitor=(self.node_monitors[i]
+                                      if self.node_monitors else None),
+                             slo=slo,
                              **node_kwargs)
             node_cache = None
             if cache is not None:
@@ -388,6 +402,15 @@ class FleetSim:
                 queue.push(Event(nxt.arrival_s, EventKind.ARRIVE, payload=nxt))
 
     # -- rollup ---------------------------------------------------------------
+    def monitor_rollup(self):
+        """The fleet-global streaming-metrics view: per-node monitors merged
+        window-by-window into a fresh monitor (nodes untouched).  Windows
+        are aligned to absolute time and sketches merge associatively and
+        commutatively, so the rollup is identical for any node order."""
+        if self.node_monitors is None:
+            raise ValueError("FleetSim was built without a monitor")
+        return type(self.node_monitors[0]).merged(self.node_monitors)
+
     def _finish(self) -> FleetResult:
         node_results = [n.sim.finish() for n in self.nodes]
         records = sorted((r for res in node_results for r in res.records),

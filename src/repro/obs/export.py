@@ -13,6 +13,16 @@ Timestamps are exported in integer-free microseconds exactly as recorded
 ``(ts, seq)`` — a deterministic tracer therefore exports byte-identical
 JSON.
 
+Cross-track causality exports as Chrome *flow events* (arrows in the
+Perfetto UI): a `BandwidthPool` realloc instant carrying a ``flow_ids``
+arg (flow id per started/reshaped request) becomes a ``ph:"s"`` flow
+start, and every wire span carrying a matching ``flow_in`` arg becomes a
+``ph:"f"`` (binding-point ``"e"``) flow finish at the span it reshaped —
+so "this realloc is why that wire span's rate changed" renders as an
+arrow from the pool track to the request track.  Only matched pairs are
+emitted (a realloc whose flows produced no span, or vice versa, adds no
+dangling arrow).
+
 `validate_chrome_trace` is the schema check CI runs against the exported
 artifact: structural requirements of the trace-event format (required keys
 per phase, value types, non-negative durations, metadata shape).  It
@@ -67,6 +77,21 @@ def to_chrome_trace(tracer: Tracer, *, unit_s: float = 1e-6) -> dict:
                            "args": {"name": thread}})
         return pids[proc], tids[track]
 
+    # pass 1: which flow ids have both a producer (realloc instant with
+    # "flow_ids") and a consumer (span with "flow_in")?  Only matched pairs
+    # export — no dangling arrows.
+    produced: set = set()
+    consumed: set = set()
+    for rec in tracer.records:
+        if isinstance(rec, Span):
+            fid = rec.args.get("flow_in")
+            if fid is not None:
+                consumed.add(fid)
+        else:
+            for fid in (rec.args.get("flow_ids") or {}).values():
+                produced.add(fid)
+    live_flows = produced & consumed
+
     body: list[tuple[float, int, dict]] = []
     for rec in tracer.records:
         pid, tid = ids(rec.track)
@@ -80,6 +105,26 @@ def to_chrome_trace(tracer: Tracer, *, unit_s: float = 1e-6) -> dict:
         if rec.args:
             ev["args"] = {k: _jsonable(v) for k, v in rec.args.items()}
         body.append((ev["ts"], rec.seq, ev))
+        # pass 2 (inline; stable sort keeps flow events right after their
+        # source record): emit the s/f halves of each matched flow
+        if isinstance(rec, Span):
+            fid = rec.args.get("flow_in")
+            if fid in live_flows:
+                # bind at the span's END: a reshaped wire span *starts*
+                # before the realloc that reshaped it, but its crossing is
+                # always after — flow arrows must run forward in time
+                body.append((ev["ts"] + ev["dur"], rec.seq,
+                             {"name": "realloc", "cat": "flow", "ph": "f",
+                              "bp": "e", "id": str(fid),
+                              "ts": ev["ts"] + ev["dur"],
+                              "pid": pid, "tid": tid}))
+        else:
+            for fid in (rec.args.get("flow_ids") or {}).values():
+                if fid in live_flows:
+                    body.append((ev["ts"], rec.seq,
+                                 {"name": "realloc", "cat": "flow",
+                                  "ph": "s", "id": str(fid),
+                                  "ts": ev["ts"], "pid": pid, "tid": tid}))
     body.sort(key=lambda e: (e[0], e[1]))
     events.extend(ev for _, _, ev in body)
     return {"traceEvents": events, "displayTimeUnit": "ms"}
@@ -110,7 +155,9 @@ def validate_chrome_trace(doc) -> list[str]:
 
     Returns a list of violations (empty = valid).  Checks: top-level shape,
     per-event required keys by phase, value types, non-negative ts/dur,
-    instant scope, and metadata-event shape.
+    instant scope, metadata-event shape, and flow-event pairing (every
+    flow id must have a start and a finish, with the start no later than
+    any step/finish carrying the same (cat, name, id)).
     """
     errors: list[str] = []
     if not isinstance(doc, dict):
@@ -118,6 +165,8 @@ def validate_chrome_trace(doc) -> list[str]:
     events = doc.get("traceEvents")
     if not isinstance(events, list):
         return ["missing or non-list 'traceEvents'"]
+    flow_starts: dict = {}   # (cat, name, id) -> earliest start ts
+    flow_others: dict = {}   # (cat, name, id) -> [(ph, ts, index), ...]
     for i, ev in enumerate(events):
         where = f"traceEvents[{i}]"
         if not isinstance(ev, dict):
@@ -152,6 +201,38 @@ def validate_chrome_trace(doc) -> list[str]:
         elif ph in ("i", "I"):
             if ev.get("s", "t") not in _INSTANT_SCOPES:
                 errors.append(f"{where}: bad instant scope {ev.get('s')!r}")
+        elif ph in ("s", "t", "f"):
+            fid = ev.get("id")
+            if not isinstance(fid, (str, int)) or isinstance(fid, bool):
+                errors.append(f"{where}: flow event needs str/int 'id'")
+                continue
+            key = (ev.get("cat"), ev.get("name"), fid)
+            if ph == "s":
+                prev = flow_starts.get(key)
+                if prev is not None:
+                    errors.append(f"{where}: duplicate flow start for "
+                                  f"id {fid!r}")
+                else:
+                    flow_starts[key] = ts
+            else:
+                flow_others.setdefault(key, []).append((ph, ts, i))
+    # flow pairing: every start needs a finish and vice versa, and the
+    # start must not postdate any of its steps/finishes
+    for key, others in flow_others.items():
+        start_ts = flow_starts.get(key)
+        for ph, ts, i in others:
+            if start_ts is None:
+                errors.append(f"traceEvents[{i}]: flow '{ph}' for id "
+                              f"{key[2]!r} has no matching 's' start")
+            elif isinstance(ts, (int, float)) and ts < start_ts:
+                errors.append(f"traceEvents[{i}]: flow '{ph}' for id "
+                              f"{key[2]!r} precedes its start "
+                              f"({ts} < {start_ts})")
+    for key, start_ts in flow_starts.items():
+        phases = [ph for ph, _, _ in flow_others.get(key, [])]
+        if "f" not in phases:
+            errors.append(f"flow start id {key[2]!r} has no matching 'f' "
+                          f"finish")
     return errors
 
 

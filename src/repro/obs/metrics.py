@@ -16,15 +16,32 @@ dict-style ``stats["hits"] += 1`` and the engine's attribute-style
 ``stats.requests += 1`` against registry-backed counters, so every
 existing call site and test keeps working while the storage moves.
 
-Histograms are deterministic: bounded sample reservoirs keep the *first*
-``max_samples`` observations (no random eviction) and percentiles use the
-same nearest-rank definition as `cluster.metrics.percentile`.
+Histograms are deterministic and **unbiased over the whole run**: exact
+nearest-rank percentiles (same definition as `cluster.metrics.percentile`)
+while the observation count fits the bounded sample buffer, and a
+mergeable relative-error `sketch.QuantileSketch` beyond it.  The old
+keep-first-``max_samples`` reservoir answered long-run percentiles from
+the run's *first minutes only* (warm-up bias — late samples could never
+move p99); the sketch sees every observation.
+
+Instruments optionally carry a ``tenant`` label (fleet per-tenant TTFT
+previously existed only in `cluster.metrics` rollups): the label is
+folded into the canonical instrument name (``name{tenant=t}``), so
+labeled instruments live in the same namespace, under the same lock, and
+appear in the same consistent `snapshot` cut as everything else.
 """
 from __future__ import annotations
 
 import math
 import threading
 from typing import Iterator, Optional, Sequence
+
+from .sketch import QuantileSketch
+
+
+def labeled(name: str, tenant: str = "") -> str:
+    """Canonical instrument name for a (name, tenant) pair."""
+    return name if not tenant else f"{name}{{tenant={tenant}}}"
 
 
 def _nearest_rank(xs: Sequence[float], q: float) -> float:
@@ -78,12 +95,18 @@ class Gauge:
 
 
 class Histogram:
-    """Streaming count/sum/min/max plus a bounded first-N sample reservoir
-    for nearest-rank percentiles.  Deterministic by construction: the kept
-    sample set depends only on observation order, never on randomness."""
+    """Streaming count/sum/min/max with exact small-n percentiles and a
+    sketch-backed tail for long runs.
+
+    While the count fits ``max_samples`` the raw samples are kept and
+    percentiles are exact nearest-rank; past that, answers come from the
+    `QuantileSketch` that has been fed *every* observation, so late
+    samples always move the tail (no warm-up bias).  Deterministic by
+    construction either way: no random eviction anywhere."""
 
     def __init__(self, name: str, lock: threading.Lock,
-                 max_samples: int = 4096) -> None:
+                 max_samples: int = 4096,
+                 rel_err: float = 0.01) -> None:
         self.name = name
         self._lock = lock
         self.max_samples = max_samples
@@ -92,6 +115,7 @@ class Histogram:
         self._min = math.inf
         self._max = -math.inf
         self._samples: list[float] = []
+        self._sketch = QuantileSketch(rel_err)
 
     def observe(self, v: float) -> None:
         with self._lock:
@@ -101,6 +125,16 @@ class Histogram:
             self._max = max(self._max, v)
             if len(self._samples) < self.max_samples:
                 self._samples.append(v)
+            self._sketch.add(v)
+
+    def _percentile(self, q: float) -> float:
+        if self._count <= self.max_samples:
+            return _nearest_rank(self._samples, q)
+        return self._sketch.quantile(q)
+
+    def percentile(self, q: float) -> float:
+        with self._lock:
+            return self._percentile(q)
 
     def _peek(self) -> dict:
         if self._count == 0:
@@ -110,13 +144,19 @@ class Histogram:
         return {"count": self._count, "sum": self._sum,
                 "mean": self._sum / self._count,
                 "min": self._min, "max": self._max,
-                "p50": _nearest_rank(self._samples, 0.50),
-                "p95": _nearest_rank(self._samples, 0.95),
-                "p99": _nearest_rank(self._samples, 0.99)}
+                "p50": self._percentile(0.50),
+                "p95": self._percentile(0.95),
+                "p99": self._percentile(0.99)}
 
     def snapshot(self) -> dict:
         with self._lock:
             return self._peek()
+
+    def sketch(self) -> QuantileSketch:
+        """A consistent copy of the underlying sketch (mergeable into
+        fleet rollups without racing live observes)."""
+        with self._lock:
+            return QuantileSketch.from_dict(self._sketch.to_dict())
 
 
 class StatGroup:
@@ -199,27 +239,43 @@ class MetricsRegistry:
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
 
-    def counter(self, name: str) -> Counter:
+    def counter(self, name: str, tenant: str = "") -> Counter:
+        name = labeled(name, tenant)
         c = self._counters.get(name)
         if c is None:
             c = self._counters.setdefault(name, Counter(name, self._lock))
         return c
 
-    def gauge(self, name: str) -> Gauge:
+    def gauge(self, name: str, tenant: str = "") -> Gauge:
+        name = labeled(name, tenant)
         g = self._gauges.get(name)
         if g is None:
             g = self._gauges.setdefault(name, Gauge(name, self._lock))
         return g
 
-    def histogram(self, name: str, max_samples: int = 4096) -> Histogram:
+    def histogram(self, name: str, max_samples: int = 4096,
+                  tenant: str = "") -> Histogram:
+        name = labeled(name, tenant)
         h = self._histograms.get(name)
         if h is None:
             h = self._histograms.setdefault(
                 name, Histogram(name, self._lock, max_samples))
         return h
 
-    def group(self, prefix: str, fields: Sequence[str]) -> StatGroup:
-        return StatGroup(self, prefix, fields)
+    def group(self, prefix: str, fields: Sequence[str],
+              tenant: str = "") -> StatGroup:
+        return StatGroup(self, labeled(prefix, tenant), fields)
+
+    def tenants(self, name: str) -> list[str]:
+        """Tenant labels under which instrument ``name`` exists."""
+        prefix = f"{name}{{tenant="
+        out = set()
+        with self._lock:
+            for store in (self._counters, self._gauges, self._histograms):
+                for full in store:
+                    if full.startswith(prefix) and full.endswith("}"):
+                        out.add(full[len(prefix):-1])
+        return sorted(out)
 
     def snapshot(self) -> dict:
         """One consistent cut of the whole registry:

@@ -73,6 +73,7 @@ class AsyncRequest:
     tokens: tuple  # prompt token ids (any int sequence; stored frozen)
     arrival_s: float = 0.0
     max_new_tokens: int = 0
+    tenant: str = ""  # per-tenant metric/SLO label ("" = unlabelled)
 
 
 @dataclasses.dataclass
@@ -128,6 +129,7 @@ class _Flight:
     ready_prev: float = _NEG_INF
     finish_prev: float = _NEG_INF
     wire_from: float = 0.0
+    flow_in_pending: Optional[str] = None  # pool flow id for the next wire span
     # real compute state (layerwise streaming)
     x: object = None
     positions: object = None
@@ -162,7 +164,9 @@ class AsyncEngine:
                  eos_id: Optional[int] = None,
                  runner: Optional[ModelRunner] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer=None) -> None:
+                 tracer=None,
+                 monitor=None,
+                 slo=None) -> None:
         self.model = model
         self.params = params
         self.orch = orch
@@ -183,6 +187,15 @@ class AsyncEngine:
         self.metrics = metrics if metrics is not None else orch.metrics
         self.stats = EngineStats(self.metrics)
         self.tracer = tracer if tracer is not None else orch.tracer
+        # Live observability (DESIGN.md §Observability): nullable streaming
+        # monitor + SLO evaluator, fed at completion event times only —
+        # attaching them cannot perturb the virtual timeline.
+        self.monitor = monitor
+        self.slo = slo
+        if slo is not None and getattr(slo, "tracer", None) is None:
+            slo.tracer = self.tracer
+        if orch.pool is not None and monitor is not None:
+            orch.pool.monitor = monitor
         self._layerwise_ok = (self.cfg.family in ("dense", "vlm")
                               or (self.cfg.family == "moe"
                                   and self.cfg.moe_every == 1))
@@ -236,7 +249,8 @@ class AsyncEngine:
 
     def _on_arrive(self, ev: Event) -> None:
         ar: AsyncRequest = ev.payload
-        rec = RequestRecord(ar.req_id, len(ar.tokens), 0.0, ar.arrival_s)
+        rec = RequestRecord(ar.req_id, len(ar.tokens), 0.0, ar.arrival_s,
+                            tenant=ar.tenant)
         self._backlog.append((ar, rec))
         if self.tracer is not None:
             self.tracer.instant(ar.req_id, "arrive", t=ev.time, cat="cluster",
@@ -292,9 +306,14 @@ class AsyncEngine:
         for ar, rec, plan in admitted:
             self._start_flight(ar, rec, plan, now, alloc)
         # 5. re-shape surviving flights' rates
+        flow_ids = getattr(pool, "last_flow_ids", None) or {}
         for fid, fl in self._active.items():
             if fl.wire_done:
                 continue
+            if fid in flow_ids:
+                # pool started/reshaped this flight: its next wire span
+                # consumes the flow id (Perfetto causality arrow)
+                fl.flow_in_pending = flow_ids[fid]
             rate = alloc.get(fid) if pool is not None else fl.alloc_rate
             if rate != fl.alloc_rate:
                 fl.alloc_rate = rate
@@ -423,8 +442,12 @@ class AsyncEngine:
         if fl.mode == "chunkwise":
             fl.wire_done = True
             if self.tracer is not None:
+                wire_args = {"bytes": fl.total_bytes}
+                if fl.flow_in_pending is not None:
+                    wire_args["flow_in"] = fl.flow_in_pending
+                    fl.flow_in_pending = None
                 self.tracer.span_at(fid, "wire", fl.wire_from, t, cat="wire",
-                                    bytes=fl.total_bytes)
+                                    **wire_args)
                 self.tracer.span_at(fid, "fetch.pre", t, t + fl.pre_s,
                                     cat="fetch")
                 self.tracer.span_at(fid, "compute", t + fl.pre_s,
@@ -438,8 +461,12 @@ class AsyncEngine:
         compute_start = max(ready, fl.finish_prev) if l > 0 else ready
         self._run_layer(fl, l)
         if self.tracer is not None:
+            wire_args = {"layer": l, "bytes": fl.per_layer[l]}
+            if fl.flow_in_pending is not None:
+                wire_args["flow_in"] = fl.flow_in_pending
+                fl.flow_in_pending = None
             self.tracer.span_at(fid, "wire", fl.wire_from, t, cat="wire",
-                                layer=l, bytes=fl.per_layer[l])
+                                **wire_args)
             if l > 0 and ready > fl.finish_prev:
                 self.tracer.span_at(fid, "stall", fl.finish_prev, ready,
                                     cat="stall", layer=l)
@@ -522,6 +549,13 @@ class AsyncEngine:
                        prefix_tokens_reused=fl.P,
                        tokens_computed=len(tokens) - fl.P)
         self.metrics.histogram("engine.ttft_model_s").observe(rec.ttft_s)
+        if fl.req.tenant:
+            self.metrics.histogram("engine.ttft_model_s",
+                                   tenant=fl.req.tenant).observe(rec.ttft_s)
+        if self.monitor is not None:
+            self.monitor.record_request(ev.time, rec)
+        if self.slo is not None:
+            self.slo.record_request(ev.time, rec)
         if self.tracer is not None:
             self._emit_request_summary(fl, ev.time)
         self._results[ev.req_id] = AsyncResult(

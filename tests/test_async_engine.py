@@ -65,7 +65,8 @@ def _cap(n_chunks: int, context: int) -> float:
     return 2.0 * n_chunks * spec.mean_wire_layer_bytes / c
 
 
-def _mk_stack(cap_bps=None, theta=0, max_flows=None, tracer=None):
+def _mk_stack(cap_bps=None, theta=0, max_flows=None, tracer=None,
+              monitor=None, slo=None):
     """(seq_engine, async_engine, tracer) sharing one orchestrator."""
     cfg, model, params = _model_and_params()
     tracer = tracer if tracer is not None else Tracer()
@@ -80,7 +81,7 @@ def _mk_stack(cap_bps=None, theta=0, max_flows=None, tracer=None):
     eng = AsyncEngine(model, params, orch, compute=_compute(),
                       profile=S3_RDMA_AGG, session_setup=True,
                       max_flows=max_flows, runner=_shared_runner(),
-                      tracer=tracer)
+                      tracer=tracer, monitor=monitor, slo=slo)
     return seq, eng, tracer
 
 
@@ -284,6 +285,45 @@ class TestBitIdentity:
         results = eng.serve(reqs)
         assert eng.batcher is not None and eng.batcher.steps > 0
         assert all(len(r.new_tokens) == 4 for r in results.values())
+
+    def test_live_monitors_change_no_virtual_timestamp(self):
+        """Zero perturbation with the live-observability half attached:
+        StreamMonitor + SLOMonitor on the engine leave every virtual
+        timestamp bit-identical, while still capturing per-window series,
+        per-tenant labeled metrics, and SLO posture."""
+        from repro.obs import SLOMonitor, SLOTarget, StreamMonitor
+        n, ctx = 3, 4 * G + G // 2
+
+        def serve(monitor=None, slo=None):
+            seq, eng, _ = _mk_stack(cap_bps=_cap(4, ctx), monitor=monitor,
+                                    slo=slo)
+            prompts = _warm_and_prompts(seq, n)
+            reqs = [AsyncRequest(f"r{i}", tuple(map(int, p)), 0.001 * i,
+                                 tenant=("gold" if i == 0 else "bronze"))
+                    for i, p in enumerate(prompts)]
+            return eng, eng.serve(reqs)
+
+        _, bare = serve()
+        monitor = StreamMonitor(width_s=0.01)
+        slo = SLOMonitor([SLOTarget(ttft_s=1e-9)], width_s=0.01)
+        eng, monitored = serve(monitor=monitor, slo=slo)
+        for rid in bare:
+            a, b = bare[rid].record, monitored[rid].record
+            assert (a.admit_s, a.flow_done_s, a.prefill_done_s) \
+                == (b.admit_s, b.flow_done_s, b.prefill_done_s)  # exact
+        assert monitor.series("ttft_s").total().count == n
+        assert sorted(monitor.tenants("ttft_s")) == ["bronze", "gold"]
+        assert slo.status()[""]["total"] == n
+        assert slo.status()[""]["bad"] == n  # 1 ns target: all bad
+        # per-tenant labeled histograms in the engine's registry
+        assert eng.metrics.tenants("engine.ttft_model_s") \
+            == ["bronze", "gold"]
+        snap = eng.metrics.snapshot()["histograms"]
+        assert snap["engine.ttft_model_s{tenant=gold}"]["count"] == 1
+        assert snap["engine.ttft_model_s{tenant=bronze}"]["count"] == n - 1
+        # unlabelled sees the async requests plus the seq warm-up submits
+        # (both engines share the orchestrator's registry)
+        assert snap["engine.ttft_model_s"]["count"] == 2 * n
 
     def test_commit_makes_later_requests_hit(self):
         """Write-behind commit in virtual event order: a cold request's

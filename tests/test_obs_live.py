@@ -1,0 +1,959 @@
+"""Live SLO observability (DESIGN.md §Observability, online half): mergeable
+quantile sketches with their relative rank-error bound, streaming windowed
+metrics and their fleet merge algebra, per-tenant SLO burn-rate monitors,
+critical-path extraction + what-if projection, Perfetto flow events, the
+perf-trajectory regression gate, and the zero-perturbation contract with
+monitors attached to the golden cluster/fleet runs."""
+import json
+import math
+import os
+import random
+import threading
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster import ClusterSim, load_trace
+from repro.cluster.metrics import RequestRecord, percentile
+from repro.core.scheduler import Policy
+from repro.core.simulator import PAPER_MARGIN_BPS
+from repro.fleet import make_router
+from repro.fleet.sim import CacheConfig, FleetSim
+from repro.obs import (Ewma, MetricsRegistry, MultiMonitor, QuantileSketch,
+                       SLOMonitor, SLOTarget, StreamMonitor, Tracer,
+                       WindowedSeries, aggregate_profile, compare,
+                       extract_all, extract_critical_path, format_profile,
+                       labeled, metric_direction, parse_derived,
+                       project_request, project_wire_scale, rows_from_csv,
+                       to_chrome_trace, validate_bench_result,
+                       validate_chrome_trace, window_index)
+from repro.obs import regress
+
+DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+GBPS = 1e9 / 8
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def now(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Quantile sketch: the documented relative-error bound + merge algebra
+# ---------------------------------------------------------------------------
+class TestQuantileSketch:
+    @settings(max_examples=8)
+    @given(st.integers(0, 10 ** 6))
+    def test_rel_err_bound_vs_exact_percentiles_10k(self, seed):
+        """The headline guarantee on >= 10k-sample runs:
+        |q_est - q_true| <= rel_err * q_true at every quantile, where
+        q_true is the exact nearest-rank order statistic."""
+        rng = random.Random(seed)
+        n = 10_000
+        samples = [rng.lognormvariate(0.0, 2.0) for _ in range(n)]
+        sk = QuantileSketch(rel_err=0.01)
+        for v in samples:
+            sk.add(v)
+        assert sk.count == n
+        for q in (0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 0.999, 1.0):
+            exact = percentile(samples, q)
+            est = sk.quantile(q)
+            assert abs(est - exact) <= sk.rel_err * exact + 1e-12, \
+                (q, est, exact)
+
+    @settings(max_examples=20)
+    @given(st.integers(0, 10 ** 6), st.integers(2, 5))
+    def test_merge_associative_commutative(self, seed, parts):
+        """Bucket-count addition: any permutation / parenthesisation of the
+        same sketch set merges to the identical sketch (node-order
+        invariance for fleet rollups)."""
+        rng = random.Random(seed)
+        shards = [QuantileSketch(rel_err=0.02) for _ in range(parts)]
+        for _ in range(300):
+            shards[rng.randrange(parts)].add(rng.lognormvariate(0.0, 1.5))
+        forward = QuantileSketch.merged(shards)
+        backward = QuantileSketch.merged(list(reversed(shards)))
+        shuffled = list(shards)
+        rng.shuffle(shuffled)
+        # left-fold with arbitrary grouping: ((s0 + s1) + s2) ...
+        nested = QuantileSketch(0.02)
+        for s in shuffled:
+            nested.merge(s)
+        assert forward == backward == nested
+        for q in (0.5, 0.95, 0.99):
+            assert forward.quantile(q) == backward.quantile(q) \
+                == nested.quantile(q)
+        # inputs untouched by the static merge
+        assert sum(s.count for s in shards) == forward.count
+
+    def test_single_value_is_exact_via_minmax_clamp(self):
+        sk = QuantileSketch()
+        sk.add(3.7)
+        for q in (0.0, 0.5, 1.0):
+            assert sk.quantile(q) == 3.7
+
+    def test_zero_and_negative_values_land_in_zero_bucket(self):
+        sk = QuantileSketch()
+        sk.add(0.0)
+        sk.add(-1e-3)  # negative noise clamps, never raises on log()
+        sk.add(5.0)
+        assert sk.count == 3
+        assert sk.quantile(0.5) == 0.0  # rank 2 of 3 is still in the zeros
+        assert sk.quantile(1.0) == 5.0
+
+    def test_deterministic_no_reservoir(self):
+        a, b = QuantileSketch(), QuantileSketch()
+        for i in range(5000):
+            v = (i * 37 % 101) + 0.5
+            a.add(v)
+            b.add(v)
+        assert a == b and a.quantile(0.99) == b.quantile(0.99)
+
+    def test_serialisation_roundtrip_preserves_equality(self):
+        sk = QuantileSketch(rel_err=0.05)
+        for v in (0.0, 1e-3, 1.0, 42.0, 1e6):
+            sk.add(v)
+        back = QuantileSketch.from_dict(json.loads(json.dumps(sk.to_dict())))
+        assert back == sk
+        assert back.quantile(0.95) == sk.quantile(0.95)
+        assert back.sum == sk.sum and back.min == sk.min
+
+    def test_incompatible_parameters_refuse_to_merge(self):
+        with pytest.raises(ValueError):
+            QuantileSketch(0.01).merge(QuantileSketch(0.02))
+
+    def test_empty_and_domain_errors(self):
+        sk = QuantileSketch()
+        assert math.isnan(sk.quantile(0.5))
+        assert math.isnan(sk.min) and math.isnan(sk.mean)
+        assert sk.snapshot()["count"] == 0
+        with pytest.raises(ValueError):
+            sk.quantile(1.5)
+        with pytest.raises(ValueError):
+            QuantileSketch(rel_err=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Histogram warm-up bias fix (the satellite's failing-before regression test)
+# ---------------------------------------------------------------------------
+class TestHistogramWarmupBias:
+    def test_late_samples_move_p99(self):
+        """The old keep-first-N reservoir froze percentiles at the run's
+        first ``max_samples`` observations — a latency shift after warm-up
+        was invisible.  The sketch-backed histogram must see it."""
+        reg = MetricsRegistry()
+        h = reg.histogram("ttft", max_samples=64)
+        for _ in range(64):
+            h.observe(1.0)
+        assert h.percentile(0.99) == 1.0  # exact while the buffer holds all
+        for _ in range(64):
+            h.observe(100.0)  # the regression the old reservoir dropped
+        p99 = h.percentile(0.99)
+        exact = percentile([1.0] * 64 + [100.0] * 64, 0.99)  # = 100.0
+        assert p99 > 50.0
+        assert abs(p99 - exact) <= 0.01 * exact
+
+    def test_exact_until_buffer_overflows_then_sketch(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("h", max_samples=10)
+        xs = [float(i) for i in range(10)]
+        for x in xs:
+            h.observe(x)
+        assert h.percentile(0.5) == percentile(xs, 0.5)  # exact at capacity
+        h.observe(10.0)
+        xs.append(10.0)
+        est = h.percentile(0.5)
+        exact = percentile(xs, 0.5)
+        assert abs(est - exact) <= 0.01 * exact + 1e-12  # sketch bound now
+
+    def test_sketch_copy_is_consistent_and_mergeable(self):
+        reg = MetricsRegistry()
+        a = reg.histogram("a")
+        b = reg.histogram("b")
+        for i in range(100):
+            a.observe(float(i + 1))
+            b.observe(float(1000 + i))
+        merged = a.sketch().merge(b.sketch())
+        assert merged.count == 200
+        # the copy is detached: merging did not mutate a's own sketch
+        assert a.snapshot()["count"] == 100
+        assert merged.quantile(1.0) == 1099.0
+
+
+# ---------------------------------------------------------------------------
+# Windowing: alignment, sliding views, EWMA — virtual times only
+# ---------------------------------------------------------------------------
+class TestWindowing:
+    def test_boundary_opens_the_new_window(self):
+        assert window_index(0.0, 1.0) == 0
+        assert window_index(0.999999, 1.0) == 0
+        assert window_index(1.0, 1.0) == 1  # [k*w, (k+1)*w) semantics
+        assert window_index(2.0 - 1e-13, 1.0) == 2  # epsilon absorbs noise
+        assert window_index(7.25, 0.5) == 14
+
+    @settings(max_examples=100)
+    @given(st.floats(0.0, 1e6), st.floats(1e-3, 1e3))
+    def test_window_contains_its_observation(self, t, width):
+        k = window_index(t, width)
+        assert k * width <= t + 1e-6 * max(1.0, t)
+        assert t < (k + 1) * width + 1e-6 * max(1.0, t)
+
+    def test_series_windows_counts_and_quantile_line(self):
+        s = WindowedSeries(width_s=1.0)
+        for t, v in ((0.2, 1.0), (0.8, 3.0), (1.5, 10.0), (3.0, 7.0)):
+            s.observe(t, v)
+        ws = s.windows()
+        assert [w.index for w in ws] == [0, 1, 3]
+        assert [w.count for w in ws] == [2, 1, 1]
+        assert ws[0].start_s == 0.0 and ws[0].end_s == 1.0
+        assert s.window_at(1.7).index == 1 and s.window_at(2.5) is None
+        line = s.series(q=1.0)
+        assert [(t0, c) for t0, _, c in line] == [(0.0, 2), (1.0, 1), (3.0, 1)]
+        assert line[1][1] == 10.0  # max of window 1
+        assert s.total().count == 4
+
+    def test_sliding_last_k_merges_tumbling_subwindows(self):
+        s = WindowedSeries(width_s=1.0)
+        for t in (0.5, 1.5, 2.5):
+            s.observe(t, t)
+        assert s.last(1).count == 1  # newest window only
+        assert s.last(2).count == 2
+        assert s.last(10).count == 3
+        at1 = s.last(2, before=1.9)  # windows 0 and 1
+        assert at1.count == 2 and at1.max == 1.5
+        assert s.last(1, before=99.0).count == 0  # empty span -> empty sketch
+
+    def test_max_windows_drops_oldest(self):
+        s = WindowedSeries(width_s=1.0, max_windows=2)
+        for t in (0.5, 1.5, 2.5):
+            s.observe(t, 1.0)
+        assert [w.index for w in s.windows()] == [1, 2]
+        assert len(s) == 2
+
+    def test_merge_equals_union_of_observations(self):
+        obs = [(0.1, 2.0), (0.9, 4.0), (1.2, 8.0), (2.7, 1.0)]
+        a, b, union = (WindowedSeries(1.0) for _ in range(3))
+        for i, (t, v) in enumerate(obs):
+            (a if i % 2 else b).observe(t, v)
+            union.observe(t, v)
+        a.merge(b)
+        assert [w.index for w in a.windows()] \
+            == [w.index for w in union.windows()]
+        for wa, wu in zip(a.windows(), union.windows()):
+            assert wa.sketch == wu.sketch
+        with pytest.raises(ValueError):
+            a.merge(WindowedSeries(2.0))
+
+    def test_ewma_half_life_decay(self):
+        e = Ewma(half_life_s=2.0)
+        assert math.isnan(e.value)
+        assert e.update(0.0, 10.0) == 10.0  # first sample seeds
+        # one half-life later: weights split 50/50
+        assert e.update(2.0, 0.0) == pytest.approx(5.0)
+        # zero dt: full-decay weight 1.0 on the old value's share
+        assert e.update(2.0, 5.0) == pytest.approx(5.0)
+        with pytest.raises(ValueError):
+            Ewma(0.0)
+
+    def test_width_must_be_positive(self):
+        with pytest.raises(ValueError):
+            WindowedSeries(0.0)
+
+
+# ---------------------------------------------------------------------------
+# StreamMonitor: per-request vocabulary, tenants, fleet merge algebra
+# ---------------------------------------------------------------------------
+def _record(req_id="r0", tenant="", ttft=2.0, queue=0.5, ctx=1000,
+            hot=250):
+    return RequestRecord(req_id, ctx, 0.5, arrival_s=1.0,
+                         admit_s=1.0 + queue, flow_done_s=2.5,
+                         prefill_done_s=1.0 + ttft, layer_compute_s=0.0,
+                         num_layers=0, bytes_total=7e6, tenant=tenant,
+                         hot_tokens=hot)
+
+
+class TestStreamMonitor:
+    def test_record_request_emits_vocabulary_and_tenant_labels(self):
+        m = StreamMonitor(width_s=1.0)
+        m.record_request(3.0, _record(tenant="acme"))
+        m.record_request(3.5, _record(req_id="r1"))  # tenantless
+        names = dict.fromkeys(n for n, _ in m.names())
+        assert set(names) == set(StreamMonitor.REQUEST_METRICS)
+        assert m.tenants("ttft_s") == ["acme"]
+        assert m.series("ttft_s").total().count == 2  # unlabelled sees both
+        assert m.series("ttft_s", tenant="acme").total().count == 1
+        assert m.series("hot_token_rate").total().max == pytest.approx(0.25)
+        assert m.series("wire_bytes").total().max == 7e6
+        with pytest.raises(KeyError):
+            m.series("ttft_s", tenant="nope")
+
+    def test_undone_record_nan_metrics_are_skipped(self):
+        m = StreamMonitor()
+        m.record_request(1.0, RequestRecord("r", 100, 0.0, arrival_s=0.0))
+        assert all(n != "ttft_s" for n, _ in m.names())
+
+    def test_inc_counts_unit_events_per_window(self):
+        m = StreamMonitor(width_s=1.0)
+        m.inc("pool.reallocs", 0.5)
+        m.inc("pool.reallocs", 0.6, n=3)
+        m.inc("pool.reallocs", 1.5)
+        wins = m.series("pool.reallocs").windows()
+        assert [(w.index, w.count) for w in wins] == [(0, 4), (1, 1)]
+
+    def test_fleet_merge_is_node_order_invariant(self):
+        nodes = [StreamMonitor(width_s=1.0) for _ in range(3)]
+        rng = random.Random(11)
+        for i, m in enumerate(nodes):
+            for j in range(20):
+                m.record_request(rng.uniform(0, 5),
+                                 _record(req_id=f"n{i}r{j}",
+                                         tenant=("t0", "t1", "")[j % 3],
+                                         ttft=rng.uniform(0.1, 3.0)))
+        fwd = StreamMonitor.merged(nodes)
+        rev = StreamMonitor.merged(list(reversed(nodes)))
+        assert fwd.snapshot() == rev.snapshot()
+        assert fwd.series("ttft_s").total().count == 60
+        # inputs untouched
+        assert nodes[0].series("ttft_s").total().count == 20
+
+    def test_spawn_copies_config_not_data(self):
+        m = StreamMonitor(width_s=0.5, rel_err=0.02, max_windows=7,
+                          ewma_half_life_s=3.0)
+        m.observe("x", 1.0, 1.0)
+        child = m.spawn()
+        assert (child.width_s, child.rel_err, child.max_windows,
+                child.ewma_half_life_s) == (0.5, 0.02, 7, 3.0)
+        assert child.names() == []
+
+    def test_ewma_rides_along_when_configured(self):
+        m = StreamMonitor(ewma_half_life_s=1.0)
+        m.observe("ttft_s", 0.0, 4.0)
+        m.observe("ttft_s", 1.0, 0.0)
+        assert m.ewma("ttft_s") == pytest.approx(2.0)
+        assert math.isnan(m.ewma("nope"))
+        assert math.isnan(StreamMonitor().ewma("ttft_s"))
+
+    def test_multimonitor_fans_out_to_stream_and_slo(self):
+        stream = StreamMonitor(width_s=1.0)
+        slo = SLOMonitor([SLOTarget(ttft_s=1.0)], width_s=1.0)
+        multi = MultiMonitor([stream, slo])
+        multi.record_request(0.5, _record(ttft=5.0))  # bad for the SLO
+        multi.inc("n", 0.5)
+        assert stream.series("ttft_s").total().count == 1
+        assert slo.status()[""]["bad"] == 1
+        child = multi.spawn()
+        assert isinstance(child.monitors[0], StreamMonitor)
+        assert isinstance(child.monitors[1], SLOMonitor)
+
+
+# ---------------------------------------------------------------------------
+# SLO burn rates and breach instants
+# ---------------------------------------------------------------------------
+class TestSLO:
+    def test_target_validation_and_is_good(self):
+        with pytest.raises(ValueError):
+            SLOTarget(goal=1.0, ttft_s=1.0)
+        with pytest.raises(ValueError):
+            SLOTarget()  # needs at least one threshold
+        tgt = SLOTarget(ttft_s=1.0, added_ttft_s=0.2)
+        assert tgt.is_good(0.9, 0.1)
+        assert not tgt.is_good(1.1, 0.1)  # ttft ceiling
+        assert not tgt.is_good(0.9, 0.3)  # added-ttft budget
+
+    def test_burn_rate_is_bad_fraction_over_budget(self):
+        slo = SLOMonitor([SLOTarget(ttft_s=1.0, goal=0.9)], width_s=1.0,
+                         short_windows=1, long_windows=2)
+        for i in range(8):
+            slo.record(0.1 * i, ttft_s=0.5)
+        for i in range(2):
+            slo.record(0.8 + 0.05 * i, ttft_s=5.0)
+        short, long = slo.burn_rates("", 0.9)
+        # 2 bad of 10 in the window: bad_fraction 0.2 over budget 0.1
+        assert short == pytest.approx(2.0)
+        assert long == pytest.approx(2.0)  # only one window populated
+
+    def test_breach_needs_both_windows_over_threshold(self):
+        tr = Tracer(FakeClock())
+        slo = SLOMonitor([SLOTarget(ttft_s=1.0, goal=0.5)], width_s=1.0,
+                         short_windows=1, long_windows=4, tracer=tr)
+        # 3 windows of good traffic fill the long window's budget headroom
+        for k in range(3):
+            for i in range(10):
+                slo.record(k + 0.1 * i, ttft_s=0.1)
+        # one bad burst: short window burns hot, long window still healthy
+        for i in range(10):
+            slo.record(3.0 + 0.05 * i, ttft_s=9.0)
+        assert not slo.breached()  # two-window AND suppressed the blip
+        # sustained badness drags the long window over too
+        t = 4.0
+        while not slo.breached():
+            slo.record(t, ttft_s=9.0)
+            t += 0.05
+        breaches = tr.instants(SLOMonitor.TRACK, "slo_breach")
+        assert len(breaches) == 1
+        args = breaches[0].args
+        assert args["burn_short"] > 1.0 and args["burn_long"] > 1.0
+        assert args["goal"] == 0.5
+        # recovery emits the paired instant exactly once
+        while slo.breached():
+            slo.record(t, ttft_s=0.1)
+            t += 0.05
+        assert len(tr.instants(SLOMonitor.TRACK, "slo_recover")) == 1
+        assert slo.status()[""]["breaches"] == 1
+
+    def test_tenant_routing_and_default_fallback(self):
+        slo = SLOMonitor([SLOTarget(ttft_s=1.0),
+                          SLOTarget(tenant="gold", ttft_s=0.1)],
+                         width_s=1.0)
+        slo.record(0.5, tenant="gold", ttft_s=0.5)   # bad for gold's 0.1
+        slo.record(0.5, tenant="other", ttft_s=0.5)  # good for default 1.0
+        st = slo.status(0.5)
+        assert st["gold"]["bad"] == 1
+        assert st[""]["bad"] == 0 and st[""]["total"] == 1
+        assert st["gold"]["burn_short"] > 1.0
+        assert slo.tenants() == ["", "gold"]
+
+    def test_no_matching_target_is_ignored(self):
+        slo = SLOMonitor([SLOTarget(tenant="gold", ttft_s=1.0)])
+        slo.record(0.5, tenant="stranger", ttft_s=99.0)
+        assert slo.status()["gold"]["total"] == 0
+
+    def test_duplicate_targets_and_bad_windows_raise(self):
+        with pytest.raises(ValueError):
+            SLOMonitor([SLOTarget(ttft_s=1.0), SLOTarget(ttft_s=2.0)])
+        with pytest.raises(ValueError):
+            SLOMonitor([SLOTarget(ttft_s=1.0)], short_windows=3,
+                       long_windows=2)
+
+    def test_record_request_uses_queue_plus_stall_as_added(self):
+        slo = SLOMonitor([SLOTarget(added_ttft_s=0.1, goal=0.9)],
+                         width_s=1.0)
+        slo.record_request(2.0, _record(queue=0.5))  # queue 0.5 > 0.1 budget
+        assert slo.status()[""]["bad"] == 1
+
+    def test_spawn_is_fresh_with_same_targets(self):
+        slo = SLOMonitor([SLOTarget(ttft_s=1.0)], width_s=2.0,
+                         burn_threshold=3.0)
+        slo.record(0.0, ttft_s=9.0)
+        child = slo.spawn()
+        assert child.status()[""]["total"] == 0
+        assert child.width_s == 2.0 and child.burn_threshold == 3.0
+
+
+# ---------------------------------------------------------------------------
+# Critical path: tiling, tie-breaks, gates, what-if projection
+# ---------------------------------------------------------------------------
+def _summary(tr, track, req_id, arrival, done, **extra):
+    tr.instant(track, "request", t=done, cat="cluster", req_id=req_id,
+               arrival_s=arrival, prefill_done_s=done, **extra)
+
+
+class TestCriticalPathUnits:
+    def test_segments_tile_the_ttft_exactly(self):
+        tr = Tracer(FakeClock())
+        tr.span_at("r0", "queue", 0.0, 1.0)
+        tr.span_at("r0", "wire", 1.0, 3.0, layer=0)
+        tr.span_at("r0", "compute", 3.0, 4.0, layer=0)
+        _summary(tr, "r0", "r0", 0.0, 4.0)
+        p = extract_critical_path(tr, "r0")
+        assert [s.name for s in p.segments] == ["queue", "wire", "compute"]
+        assert p.segments[0].t0 == p.arrival_s
+        assert p.segments[-1].t1 == p.prefill_done_s
+        for a, b in zip(p.segments, p.segments[1:]):
+            assert a.t1 == b.t0  # gap-free
+        assert p.ttft_s == 4.0
+        assert p.by_category() == {"queue": 1.0, "wire": 2.0, "compute": 1.0}
+        assert p.segments[1].layer == 0
+
+    def test_unspanned_interval_becomes_a_gate(self):
+        tr = Tracer(FakeClock())
+        tr.span_at("r0", "queue", 0.0, 1.0)
+        # nothing covers (1.0, 1.5): the assembly/startup gate
+        tr.span_at("r0", "wire", 1.5, 2.0)
+        _summary(tr, "r0", "r0", 0.0, 2.0)
+        p = extract_critical_path(tr, "r0")
+        assert [s.name for s in p.segments] == ["queue", "gate", "wire"]
+        gate = p.segments[1]
+        assert (gate.t0, gate.t1) == (1.0, 1.5)
+
+    def test_stall_never_wins_a_tie(self):
+        tr = Tracer(FakeClock())
+        tr.span_at("r0", "stall", 0.0, 2.0)
+        tr.span_at("r0", "wire", 0.5, 2.0)  # ends at the same instant
+        _summary(tr, "r0", "r0", 0.0, 2.0)
+        p = extract_critical_path(tr, "r0")
+        assert p.segments[-1].name == "wire"
+        # but a stall with no competitor still carries the path
+        tr2 = Tracer(FakeClock())
+        tr2.span_at("r1", "stall", 0.0, 1.0)
+        _summary(tr2, "r1", "r1", 0.0, 1.0)
+        assert extract_critical_path(tr2, "r1").segments[0].name == "stall"
+
+    def test_compute_beats_wire_at_the_frontier(self):
+        tr = Tracer(FakeClock())
+        tr.span_at("r0", "wire", 0.0, 1.0)
+        tr.span_at("r0", "compute", 0.5, 1.0)
+        _summary(tr, "r0", "r0", 0.0, 1.0)
+        p = extract_critical_path(tr, "r0")
+        assert p.segments[-1].name == "compute"
+
+    def test_missing_summary_raises(self):
+        with pytest.raises(ValueError):
+            extract_critical_path(Tracer(FakeClock()), "nope")
+
+    def test_aggregate_profile_shares_sum_to_one(self):
+        tr = Tracer(FakeClock())
+        for i, dur in enumerate((1.0, 3.0)):
+            trk = f"r{i}"
+            tr.span_at(trk, "wire", 0.0, dur)
+            _summary(tr, trk, trk, 0.0, dur)
+        prof = aggregate_profile(extract_all(tr))
+        assert prof["requests"] == 2
+        assert prof["total_s"] == pytest.approx(4.0)
+        assert prof["by_category"]["wire"]["share"] == pytest.approx(1.0)
+        out = format_profile(prof)
+        assert "wire" in out and "2 requests" in out
+
+    def test_wire_scale_must_be_positive(self):
+        tr = Tracer(FakeClock())
+        with pytest.raises(ValueError):
+            project_request(tr, "r0", 0.0)
+
+
+class TestCriticalPathGolden:
+    """Extraction + projection over a real traced cluster run."""
+
+    @pytest.fixture(scope="class")
+    def traced(self):
+        tr = Tracer()
+        trace = load_trace(os.path.join(DATA, "golden_trace.json"))
+        sim = ClusterSim(cap_bps=50 * GBPS, policy=Policy.CAL_STALL_OPT,
+                         margin_bps=PAPER_MARGIN_BPS, tracer=tr)
+        return tr, sim.run(trace)
+
+    def test_every_request_path_tiles_arrival_to_first_token(self, traced):
+        tr, res = traced
+        paths = extract_all(tr)
+        assert len(paths) == sum(1 for r in res.records if r.done) > 0
+        for p in paths:
+            assert p.segments, p.req_id
+            assert p.segments[0].t0 == pytest.approx(p.arrival_s, abs=1e-9)
+            assert p.segments[-1].t1 == pytest.approx(p.prefill_done_s,
+                                                      abs=1e-9)
+            for a, b in zip(p.segments, p.segments[1:]):
+                assert a.t1 == pytest.approx(b.t0, abs=1e-9)
+                assert a.dur_s > 0
+            assert sum(s.dur_s for s in p.segments) \
+                == pytest.approx(p.ttft_s, abs=1e-6)
+
+    def test_projection_at_scale_one_reproduces_measured_ttft(self, traced):
+        tr, res = traced
+        out = project_wire_scale(tr, 1.0)
+        assert out["requests"] > 0
+        for p in out["projections"]:
+            assert p.projected_ttft_s == pytest.approx(p.measured_ttft_s,
+                                                       abs=1e-9), p.req_id
+        assert out["p95_added_ttft_cut_s"] == pytest.approx(0.0, abs=1e-9)
+
+    def test_faster_wire_never_hurts(self, traced):
+        tr, _ = traced
+        out = project_wire_scale(tr, 2.0)
+        for p in out["projections"]:
+            assert p.projected_ttft_s <= p.measured_ttft_s + 1e-9, p.req_id
+        assert out["p95_added_ttft_cut_s"] >= -1e-9
+        assert out["projected_ttft_p95_s"] <= out["measured_ttft_p95_s"] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Perfetto flow events: pool realloc -> reshaped wire span arrows
+# ---------------------------------------------------------------------------
+class TestFlowEvents:
+    def _doc(self, flow_in="pool:0", flow_ids=("pool:0",)):
+        tr = Tracer(FakeClock())
+        tr.instant("pool", "realloc", t=1.0, cat="pool",
+                   flow_ids={f"r{i}": fid for i, fid in enumerate(flow_ids)})
+        # the reshaped span STARTS before the realloc (it was in flight)
+        tr.span_at("r0", "wire", 0.5, 2.0, cat="wire", flow_in=flow_in)
+        return to_chrome_trace(tr)
+
+    def test_matched_pair_exports_s_then_f_at_span_end(self):
+        doc = self._doc()
+        assert validate_chrome_trace(doc) == []
+        starts = [e for e in doc["traceEvents"] if e["ph"] == "s"]
+        finishes = [e for e in doc["traceEvents"] if e["ph"] == "f"]
+        assert len(starts) == len(finishes) == 1
+        assert starts[0]["id"] == finishes[0]["id"] == "pool:0"
+        assert starts[0]["ts"] == 1.0e6  # at the realloc instant
+        # bound at the span END so the arrow runs forward in time even
+        # though the reshaped span started before the realloc
+        assert finishes[0]["ts"] == 2.0e6
+        assert finishes[0]["bp"] == "e"
+
+    def test_unmatched_ids_add_no_dangling_arrows(self):
+        # produced but never consumed
+        doc = self._doc(flow_in=None, flow_ids=("pool:0",))
+        assert [e for e in doc["traceEvents"] if e["ph"] in "sf"] == []
+        # consumed but never produced
+        doc = self._doc(flow_in="pool:9", flow_ids=("pool:0",))
+        assert [e for e in doc["traceEvents"] if e["ph"] in "sf"] == []
+        assert validate_chrome_trace(doc) == []
+
+    def test_validator_flags_broken_flow_pairing(self):
+        base = {"pid": 1, "tid": 1, "cat": "flow", "name": "realloc"}
+        bad = {"traceEvents": [
+            dict(base, ph="s", id="a", ts=5.0),
+            dict(base, ph="s", id="a", ts=6.0),   # duplicate start
+            dict(base, ph="f", id="a", ts=1.0),   # precedes its start
+            dict(base, ph="f", id="b", ts=2.0),   # no matching start
+            dict(base, ph="s", id="c", ts=0.0),   # start without finish
+            dict(base, ph="f", id=True, ts=3.0),  # bool is not a valid id
+        ]}
+        errors = validate_chrome_trace(bad)
+        assert len(errors) == 4 + 1  # the four pairing faults + the bad id
+        for needle in ("duplicate flow start", "precedes its start",
+                       "no matching 's'", "no matching 'f'",
+                       "str/int 'id'"):
+            assert any(needle in e for e in errors), (needle, errors)
+
+    def test_golden_cluster_trace_carries_matched_flows(self):
+        tr = Tracer()
+        trace = load_trace(os.path.join(DATA, "golden_trace.json"))
+        ClusterSim(cap_bps=50 * GBPS, policy=Policy.CAL_STALL_OPT,
+                   margin_bps=PAPER_MARGIN_BPS, tracer=tr).run(trace)
+        doc = to_chrome_trace(tr)
+        assert validate_chrome_trace(doc) == []
+        starts = {e["id"] for e in doc["traceEvents"] if e["ph"] == "s"}
+        finishes = {e["id"] for e in doc["traceEvents"] if e["ph"] == "f"}
+        assert starts and starts == finishes  # every arrow has both ends
+
+
+# ---------------------------------------------------------------------------
+# Perf-trajectory regression gate
+# ---------------------------------------------------------------------------
+CSV = [
+    "name,us_per_call,derived",
+    "cluster/n16/equal,123.45,added_ttft_ms=1963;p95_ms=8812;"
+    "goodput_rps=1.71;policy=equal",
+    "cluster/n16/cal,88.00,added_ttft_ms=1100;p95_ms=8878;"
+    "goodput_rps=1.80;policy=cal",
+]
+
+
+def _doc(rows=None):
+    return regress.bench_result("bench_x", rows_from_csv(CSV)
+                                if rows is None else rows)
+
+
+class TestRegressParsing:
+    def test_rows_from_csv_skips_header_and_parses_metrics(self):
+        rows = rows_from_csv(CSV)
+        assert len(rows) == 2  # header dropped
+        assert rows[0]["name"] == "cluster/n16/equal"
+        assert rows[0]["us_per_call"] == 123.45
+        m = rows[0]["metrics"]
+        assert m["added_ttft_ms"] == 1963.0 and m["policy"] == "equal"
+
+    def test_parse_derived_tolerates_junk(self):
+        assert parse_derived("a=1;;b=x;noequals; c = 2 ") \
+            == {"a": 1.0, "b": "x", "c": 2.0}
+
+    def test_metric_direction(self):
+        assert metric_direction("ttft_p95_ms") == -1
+        assert metric_direction("us_per_call") == -1
+        assert metric_direction("egress_gb") == -1
+        assert metric_direction("goodput_rps") == +1
+        assert metric_direction("hot_rate") == +1  # rate beats the _s suffix
+        assert metric_direction("p95_reduction_x") == +1
+        assert metric_direction("policy") == 0
+
+    def test_schema_validation(self):
+        assert validate_bench_result(_doc()) == []
+        assert validate_bench_result([]) != []
+        assert validate_bench_result({"schema": "v0"})
+        bad = _doc()
+        bad["rows"][0]["metrics"]["x"] = [1, 2]
+        assert any("metrics" in v for v in validate_bench_result(bad))
+        with pytest.raises(ValueError):
+            regress.write_bench_result("/dev/null", {"schema": "nope"})
+
+    def test_write_read_roundtrip(self, tmp_path):
+        p = tmp_path / "BENCH_x.json"
+        regress.write_bench_result(str(p), _doc())
+        with open(p) as f:
+            assert json.load(f) == _doc()
+
+
+class TestRegressCompare:
+    def test_unmodified_rerun_is_all_pass(self):
+        deltas = compare(_doc(), _doc())
+        assert deltas and all(d.status == regress.PASS for d in deltas)
+
+    def test_twenty_percent_ttft_regression_flags(self):
+        cur = _doc()
+        cur["rows"][1]["metrics"]["p95_ms"] *= 1.20
+        deltas = compare(_doc(), cur)
+        (flag,) = [d for d in deltas if d.status != regress.PASS]
+        assert flag.status == regress.REGRESSION
+        assert flag.metric == "p95_ms" and flag.row == "cluster/n16/cal"
+        assert flag.rel_change == pytest.approx(0.20)
+
+    def test_direction_governs_regression_vs_improvement(self):
+        cur = _doc()
+        cur["rows"][0]["metrics"]["goodput_rps"] *= 0.5  # higher-better drop
+        cur["rows"][1]["metrics"]["added_ttft_ms"] *= 0.5  # lower-better drop
+        by = {(d.row, d.metric): d.status for d in compare(_doc(), cur)}
+        assert by[("cluster/n16/equal", "goodput_rps")] == regress.REGRESSION
+        assert by[("cluster/n16/cal", "added_ttft_ms")] \
+            == regress.IMPROVEMENT
+
+    def test_noise_band_and_abs_floor_suppress_flags(self):
+        cur = _doc()
+        cur["rows"][0]["metrics"]["p95_ms"] *= 1.05  # inside the 10% band
+        assert all(d.status == regress.PASS for d in compare(_doc(), cur))
+        cur = _doc()
+        cur["rows"][0]["metrics"]["p95_ms"] += 2.0
+        # tight band but the absolute change is under the floor
+        deltas = compare(_doc(), cur, band=1e-6, abs_floor=10.0)
+        assert all(d.status == regress.PASS for d in deltas)
+
+    def test_string_and_unknown_direction_changes_are_drift(self):
+        cur = _doc()
+        cur["rows"][0]["metrics"]["policy"] = "other"
+        by = {(d.row, d.metric): d.status for d in compare(_doc(), cur)}
+        assert by[("cluster/n16/equal", "policy")] == regress.DRIFT
+
+    def test_new_and_missing_rows_and_metrics(self):
+        cur = _doc()
+        cur["rows"] = [cur["rows"][0]]  # second row vanished
+        cur["rows"][0]["metrics"]["brand_new"] = 1.0
+        del cur["rows"][0]["metrics"]["goodput_rps"]
+        statuses = {(d.row, d.metric): d.status for d in compare(_doc(), cur)}
+        assert statuses[("cluster/n16/cal", "<row>")] == regress.MISSING
+        assert statuses[("cluster/n16/equal", "brand_new")] == regress.NEW
+        assert statuses[("cluster/n16/equal", "goodput_rps")] \
+            == regress.MISSING
+
+    def test_timings_skipped_unless_asked(self):
+        cur = _doc()
+        cur["rows"][0]["us_per_call"] *= 100.0  # CI machine noise
+        assert all(d.status == regress.PASS for d in compare(_doc(), cur))
+        deltas = compare(_doc(), cur, timings=True)
+        assert any(d.metric == "us_per_call"
+                   and d.status == regress.REGRESSION for d in deltas)
+
+    def test_format_report_counts_and_lists_flags(self):
+        cur = _doc()
+        cur["rows"][1]["metrics"]["p95_ms"] *= 1.5
+        out = regress.format_report("bench_x", compare(_doc(), cur))
+        assert out.startswith("bench_x:")
+        assert "1 regression" in out and "p95_ms" in out
+
+
+class TestRegressCLI:
+    def _write(self, path, doc):
+        regress.write_bench_result(str(path), doc)
+
+    def test_gate_flags_injected_regression_passes_rerun(self, tmp_path,
+                                                         capsys):
+        base_dir = tmp_path / "trajectory"
+        base_dir.mkdir()
+        self._write(base_dir / "BENCH_x.json", _doc())
+        cur = tmp_path / "BENCH_x.json"
+        self._write(cur, _doc())
+        # unmodified re-run: clean under --gate
+        assert regress.main(["--baseline", str(base_dir), "--gate",
+                             str(cur)]) == 0
+        assert "pass" in capsys.readouterr().out
+        # injected 20% TTFT regression: flagged, and --gate exits nonzero
+        bad = _doc()
+        bad["rows"][1]["metrics"]["p95_ms"] *= 1.20
+        self._write(cur, bad)
+        assert regress.main(["--baseline", str(base_dir), str(cur)]) == 0
+        assert regress.main(["--baseline", str(base_dir), "--gate",
+                             str(cur)]) == 1
+        out = capsys.readouterr().out
+        assert "regression" in out and "p95_ms" in out
+
+    def test_missing_baseline_starts_the_trajectory(self, tmp_path, capsys):
+        base_dir = tmp_path / "trajectory"
+        base_dir.mkdir()
+        cur = tmp_path / "BENCH_y.json"
+        self._write(cur, _doc())
+        assert regress.main(["--baseline", str(base_dir), "--gate",
+                             str(cur)]) == 0
+        assert "trajectory starts here" in capsys.readouterr().out
+
+    def test_usage_error(self, capsys):
+        assert regress.main([]) == 2
+        assert "usage" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# Tenant labels in the metrics registry
+# ---------------------------------------------------------------------------
+class TestTenantLabels:
+    def test_labeled_name_folding(self):
+        assert labeled("ttft") == "ttft"
+        assert labeled("ttft", "acme") == "ttft{tenant=acme}"
+
+    def test_labeled_instruments_share_namespace_and_lock(self):
+        reg = MetricsRegistry()
+        plain = reg.histogram("engine.ttft_s")
+        acme = reg.histogram("engine.ttft_s", tenant="acme")
+        assert plain is not acme
+        assert reg.histogram("engine.ttft_s", tenant="acme") is acme
+        reg.counter("engine.requests", tenant="acme").inc()
+        reg.gauge("pool.flows", tenant="beta").set(2.0)
+        acme.observe(1.0)
+        snap = reg.snapshot()
+        assert "engine.ttft_s{tenant=acme}" in snap["histograms"]
+        assert snap["counters"]["engine.requests{tenant=acme}"] == 1
+        assert reg.tenants("engine.ttft_s") == ["acme"]
+        assert reg.tenants("engine.requests") == ["acme"]
+        assert reg.tenants("pool.flows") == ["beta"]
+        assert reg.tenants("nope") == []
+
+    def test_concurrent_tenant_adds_snapshot_consistently(self):
+        """Torn-snapshot extension: per-tenant StatGroups under one
+        registry keep the paired-field invariant per tenant AND the
+        whole-registry snapshot stays a single consistent cut."""
+        reg = MetricsRegistry()
+        tenants = ("acme", "beta")
+        groups = {t: reg.group("engine", ("reused", "computed"), tenant=t)
+                  for t in tenants}
+        PROMPT, N = 64, 200
+        torn, stop = [], threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                snap = reg.snapshot()["counters"]
+                for t in tenants:
+                    pair = (snap.get(f"engine{{tenant={t}}}.reused", 0)
+                            + snap.get(f"engine{{tenant={t}}}.computed", 0))
+                    if pair % PROMPT:
+                        torn.append((t, pair))
+
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        for r in readers:
+            r.start()
+
+        def writer(tenant, seed):
+            g = groups[tenant]
+            for i in range(N):
+                reused = (seed * 31 + i) % PROMPT
+                g.add(reused=reused, computed=PROMPT - reused)
+
+        writers = [threading.Thread(target=writer, args=(t, s))
+                   for s, t in enumerate(tenants * 2)]
+        for w in writers:
+            w.start()
+        for w in writers:
+            w.join()
+        stop.set()
+        for r in readers:
+            r.join()
+        assert not torn
+        for t in tenants:
+            s = groups[t].snapshot()
+            assert s["reused"] + s["computed"] == 2 * N * PROMPT
+
+
+# ---------------------------------------------------------------------------
+# Zero perturbation with monitors attached + fleet rollup
+# ---------------------------------------------------------------------------
+def _run_golden_cluster(tracer=None, monitor=None, slo=None):
+    trace = load_trace(os.path.join(DATA, "golden_trace.json"))
+    sim = ClusterSim(cap_bps=50 * GBPS, policy=Policy.CAL_STALL_OPT,
+                     margin_bps=PAPER_MARGIN_BPS, tracer=tracer,
+                     monitor=monitor, slo=slo)
+    return sim.run(trace)
+
+
+def _run_golden_fleet(tracer=None, monitor=None, slo=None):
+    trace = load_trace(os.path.join(DATA, "golden_trace_fleet.json"))
+    sim = FleetSim(2, make_router("affinity"),
+                   cache=CacheConfig(hot_capacity_bytes=2 * 1024 ** 3,
+                                     policy="lru"),
+                   cap_bps=20 * GBPS, max_flows=8, tracer=tracer,
+                   monitor=monitor, slo=slo)
+    return sim, sim.run(trace)
+
+
+def _record_key(r):
+    return (r.req_id, r.arrival_s, r.admit_s, r.flow_done_s,
+            r.prefill_done_s, r.bytes_total, r.layer_compute_s, r.replanned)
+
+
+class TestMonitoredGoldenCluster:
+    def test_monitor_and_slo_change_no_simulated_timestamp(self):
+        bare = _run_golden_cluster()
+        tr = Tracer()
+        monitor = StreamMonitor(width_s=1.0, ewma_half_life_s=5.0)
+        slo = SLOMonitor([SLOTarget(added_ttft_s=0.5, goal=0.9)],
+                         width_s=1.0)
+        monitored = _run_golden_cluster(tracer=tr, monitor=monitor, slo=slo)
+        assert ([_record_key(r) for r in bare.records]
+                == [_record_key(r) for r in monitored.records])
+        assert bare.events == monitored.events
+        assert bare.reallocs == monitored.reallocs
+        # and the observers actually observed: per-window TTFT series exist
+        done = sum(1 for r in monitored.records if r.done)
+        assert monitor.series("ttft_s").total().count == done > 0
+        assert len(monitor.series("ttft_s").windows()) >= 1
+        assert monitor.series("pool.reallocs").total().count \
+            == monitored.reallocs
+        assert slo.status()[""]["total"] == done
+        # slo instants (if any) landed on the shared tracer's slo track
+        assert slo.tracer is tr
+
+    def test_golden_export_with_monitors_stays_schema_valid(self, tmp_path):
+        tr = Tracer()
+        _run_golden_cluster(tracer=tr, monitor=StreamMonitor(),
+                            slo=SLOMonitor([SLOTarget(ttft_s=1e-6)]))
+        doc = to_chrome_trace(tr)
+        assert validate_chrome_trace(doc) == []
+        # the absurd 1 µs target breaches immediately: instants on "slo"
+        assert tr.instants("slo", "slo_breach")
+
+
+class TestMonitoredGoldenFleet:
+    def test_monitor_changes_no_fleet_timestamp(self):
+        _, bare = _run_golden_fleet()
+        _, monitored = _run_golden_fleet(monitor=StreamMonitor(width_s=1.0))
+        ka = [(r.req_id, r.node, r.hot_tokens, r.hit_rate, r.ttft_s,
+               r.bytes_total) for r in bare.records]
+        kb = [(r.req_id, r.node, r.hot_tokens, r.hit_rate, r.ttft_s,
+               r.bytes_total) for r in monitored.records]
+        assert ka == kb
+        assert bare.global_chunks == monitored.global_chunks
+
+    def test_rollup_is_node_order_invariant_and_complete(self):
+        sim, res = _run_golden_fleet(monitor=StreamMonitor(width_s=1.0))
+        rollup = sim.monitor_rollup()
+        rev = StreamMonitor.merged(list(reversed(sim.node_monitors)))
+        assert rollup.snapshot() == rev.snapshot()
+        done = sum(1 for r in res.records if r.done)
+        assert rollup.series("ttft_s").total().count == done > 0
+        # per-node monitors hold only their node's share
+        per_node = [m.series("ttft_s").total().count
+                    for m in sim.node_monitors]
+        assert sum(per_node) == done and all(c < done for c in per_node)
+        # rollup inputs untouched
+        assert sim.node_monitors[0].series("ttft_s").total().count \
+            == per_node[0]
+
+    def test_fleet_slo_is_global_and_tenantwise(self):
+        slo = SLOMonitor([SLOTarget(ttft_s=1e-6)])  # everything is bad
+        _, res = _run_golden_fleet(slo=slo)
+        done = sum(1 for r in res.records if r.done)
+        assert slo.status()[""]["total"] == done
+        assert slo.status()[""]["bad"] == done
+
+    def test_rollup_without_monitor_raises(self):
+        sim, _ = _run_golden_fleet()
+        with pytest.raises(ValueError):
+            sim.monitor_rollup()
