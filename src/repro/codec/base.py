@@ -55,6 +55,15 @@ class KVCodec(ABC):
         del spec, layer
         return self.bits
 
+    def layer_group(self, spec: KVSpec, layer: int) -> int:
+        """Scale group of layer ``layer``.  Mixed-bit maps can carry
+        per-layer group sizes, so every dequant path — fused attention,
+        standalone kernel, numpy fallback — must resolve the group through
+        this per layer rather than reading a codec-wide attribute once per
+        payload."""
+        del spec, layer
+        return getattr(self, "group", 1)
+
     @abstractmethod
     def encode_chunk(self, k: np.ndarray, v: np.ndarray, spec: KVSpec) -> bytes:
         """``k``/``v``: [L, G, width] arrays in the model dtype (bf16 may

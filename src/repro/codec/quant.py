@@ -58,7 +58,8 @@ class _QuantCodec(KVCodec):
             bits = self.layer_bits(spec, l)
             if bits == 4 and W % 2:
                 raise ValueError(f"int4 codec needs an even width, got {W}")
-            q, scales = quantize_grouped(kv[l], bits, self.group)
+            q, scales = quantize_grouped(kv[l], bits,
+                                         self.layer_group(spec, l))
             parts.append(scales.tobytes())  # K scales then V scales
             parts.append(self._pack(q.reshape(2 * G, W), bits))
         buf = b"".join(parts)
@@ -75,10 +76,11 @@ class _QuantCodec(KVCodec):
         G, W = spec.chunk_tokens, spec.width
         S = spec.wire_layer_bytes(layer)
         bits = self.layer_bits(spec, layer)
+        group = self.layer_group(spec, layer)
         arr = np.frombuffer(payload, dtype=np.uint8).reshape(num_chunks, S)
-        sb = spec.scale_bytes_per_layer
+        sb = spec.layer_scale_bytes(layer)
         scales = np.ascontiguousarray(arr[:, :sb]).view(np.float16)
-        scales = scales.reshape(num_chunks, 2, W // self.group)
+        scales = scales.reshape(num_chunks, 2, W // group)
         body = np.ascontiguousarray(arr[:, sb:])
         if bits == 4:
             q = body.reshape(num_chunks, 2 * G, W // 2)
@@ -89,11 +91,12 @@ class _QuantCodec(KVCodec):
     def decode_layer_payload(self, payload, num_chunks, spec, dtype, layer=0):
         G, W = spec.chunk_tokens, spec.width
         q, scales = self.parse_layer_payload(payload, num_chunks, spec, layer)
+        group = self.layer_group(spec, layer)
         if self.layer_bits(spec, layer) == 4:
             q = unpack_int4(q)
-        k = dequantize_grouped(q[:, :G, :], scales[:, 0, :], self.group,
+        k = dequantize_grouped(q[:, :G, :], scales[:, 0, :], group,
                                np.dtype(dtype))
-        v = dequantize_grouped(q[:, G:, :], scales[:, 1, :], self.group,
+        v = dequantize_grouped(q[:, G:, :], scales[:, 1, :], group,
                                np.dtype(dtype))
         return (np.ascontiguousarray(k.reshape(num_chunks * G, W)),
                 np.ascontiguousarray(v.reshape(num_chunks * G, W)))

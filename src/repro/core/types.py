@@ -35,8 +35,11 @@ KiB = 1024
 #   mixed/<digits>[/gN]           per-layer bit map, one digit in {4, 8} per
 #                                 layer (layer 0 first); optional group-wise
 #                                 scales (default per-channel)
+#   mixed/<digits>/gN1,N2,...     per-layer scale groups too: one entry per
+#                                 layer (must match the bit-map length)
 #
-# e.g. "gw4/g64", "mixed/8844/g128".  The descriptor's one-byte codec id
+# e.g. "gw4/g64", "mixed/8844/g128", "mixed/8844/g64,64,128,128".  The
+# descriptor's one-byte codec id
 # names the *family* (decode algorithm); the parameters (group size, bit
 # map) are deployment state carried by KVSpec, exactly like (L, G, d).
 CODEC_IDENTITY = "identity"
@@ -60,21 +63,30 @@ class CodecFormat:
 
     ``group`` counts *channels sharing one fp16 scale* (1 = per-channel, the
     finest); ``bit_map`` is the per-layer bits of a mixed codec (None for
-    uniform codecs, whose every layer uses ``bits``).
+    uniform codecs, whose every layer uses ``bits``); ``group_map`` is the
+    per-layer scale group of a mixed codec whose layers quantize at
+    different granularities (None = every layer uses ``group``).
     """
 
     family: str  # key of CODEC_WIRE_IDS
     bits: int  # uniform quantized bits per value (0 = raw model dtype)
     group: int = 1
     bit_map: Optional[tuple[int, ...]] = None
+    group_map: Optional[tuple[int, ...]] = None
 
     def layer_bits(self, layer: int) -> int:
         return self.bit_map[layer] if self.bit_map is not None else self.bits
 
+    def layer_group(self, layer: int) -> int:
+        """Scale group of layer ``layer`` (mixed maps can vary per layer)."""
+        return self.group_map[layer] if self.group_map is not None \
+            else self.group
+
     @property
     def is_variable_rate(self) -> bool:
         """True when per-layer wire strides differ (descriptor needs v3)."""
-        return self.bit_map is not None and len(set(self.bit_map)) > 1
+        return (self.bit_map is not None and len(set(self.bit_map)) > 1) or \
+            (self.group_map is not None and len(set(self.group_map)) > 1)
 
 
 @functools.lru_cache(maxsize=None)
@@ -104,8 +116,24 @@ def parse_codec(codec: str) -> CodecFormat:
         if not digits or any(d not in "48" for d in digits):
             raise ValueError(
                 f"mixed bit map must be digits in {{4,8}}, got {digits!r}")
-        fmt = CodecFormat(CODEC_MIXED, 0, take_group(1),
-                          tuple(int(d) for d in digits))
+        bit_map = tuple(int(d) for d in digits)
+        group, group_map = 1, None
+        if rest:  # g<N> (uniform) or g<N1>,<N2>,... (one entry per layer)
+            g = rest.pop(0)
+            vals = g[1:].split(",") if g.startswith("g") else []
+            if not vals or any(not v.isdigit() or int(v) <= 0 for v in vals):
+                raise ValueError(
+                    f"bad scale-group suffix {g!r} in codec {codec!r}")
+            if len(vals) == 1:
+                group = int(vals[0])
+            elif len(vals) == len(bit_map):
+                groups = tuple(int(v) for v in vals)
+                group, group_map = groups[0], groups
+            else:
+                raise ValueError(
+                    f"per-layer scale groups need one entry per bit-map "
+                    f"digit ({len(bit_map)}), got {len(vals)} in {codec!r}")
+        fmt = CodecFormat(CODEC_MIXED, 0, group, bit_map, group_map)
     else:
         raise ValueError(f"unknown wire codec {codec!r}; "
                          f"families: {sorted(CODEC_WIRE_IDS)}")
@@ -152,10 +180,12 @@ class KVSpec:
         fmt = parse_codec(self.codec)  # raises on an unknown/garbled spec
         if fmt.family == CODEC_IDENTITY:
             return
-        if self.width % fmt.group:
-            raise ValueError(
-                f"scale group {fmt.group} does not divide width {self.width} "
-                f"(codec {self.codec!r})")
+        for g in set(fmt.group_map) if fmt.group_map is not None \
+                else {fmt.group}:
+            if self.width % g:
+                raise ValueError(
+                    f"scale group {g} does not divide width {self.width} "
+                    f"(codec {self.codec!r})")
         if fmt.bit_map is not None and len(fmt.bit_map) != self.num_layers:
             raise ValueError(
                 f"mixed bit map has {len(fmt.bit_map)} entries for "
@@ -210,14 +240,29 @@ class KVSpec:
 
     @property
     def scale_groups(self) -> int:
-        """fp16 scales per matrix per layer slice (width / channel group)."""
+        """fp16 scales per matrix per layer slice (width / channel group).
+        Only defined when every layer shares one group size; per-layer
+        callers use :meth:`layer_scale_groups`."""
         fmt = self.codec_format
+        if fmt.group_map is not None and len(set(fmt.group_map)) > 1:
+            raise ValueError(
+                f"codec {self.codec!r} has per-layer scale groups; "
+                f"use layer_scale_groups(layer)")
         return 0 if fmt.bits == 0 and fmt.bit_map is None \
             else self.width // fmt.group
+
+    def layer_scale_groups(self, layer: int) -> int:
+        """fp16 scales per matrix in layer ``layer``'s slice of a chunk."""
+        fmt = self.codec_format
+        return 0 if fmt.bits == 0 and fmt.bit_map is None \
+            else self.width // fmt.layer_group(layer)
 
     @property
     def scale_bytes_per_layer(self) -> int:
         return 2 * self.scale_groups * 2  # 2 matrices * groups * fp16
+
+    def layer_scale_bytes(self, layer: int) -> int:
+        return 2 * self.layer_scale_groups(layer) * 2
 
     def wire_layer_bytes(self, layer: int) -> int:
         """Encoded bytes of layer ``layer``'s slice of any chunk (the entry
@@ -226,7 +271,7 @@ class KVSpec:
         if bits == 0:
             return self.per_layer_chunk_bytes
         per_matrix = (self.chunk_tokens * self.width * bits + 7) // 8
-        return self.scale_bytes_per_layer + 2 * per_matrix
+        return self.layer_scale_bytes(layer) + 2 * per_matrix
 
     @functools.cached_property
     def wire_layer_offsets(self) -> tuple[int, ...]:

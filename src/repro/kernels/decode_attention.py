@@ -1,12 +1,20 @@
 """Pallas TPU decode attention: one query token per sequence against a long
 KV cache — the memory-bound hot spot of the decode_32k / long_500k shapes.
 
-Tiling: grid (B, S/bs) with the cache-scan axis sequential; all H query heads
-are processed together per batch row (q is tiny: [H, dh]), so each grid step
-streams one [bs, KV, dh] cache tile from HBM through VMEM exactly once —
+Tiling: grid (B, ceil(S/bs)) with the cache-scan axis sequential; all H query
+heads are processed together per batch row (q is tiny: [H, dh]), so each grid
+step streams one [bs, KV, dh] cache tile from HBM through VMEM exactly once —
 arithmetic intensity is what the roofline says it is (~2 flops/byte), and the
 kernel's job is to never touch a cache byte twice.  ``lengths`` masks the
-valid prefix (pos+1), so one compiled kernel serves every fill level.
+valid prefix (pos+1), so one compiled kernel serves every fill level; the same
+mask covers the ragged trailing block when S is not a block multiple (the
+grid is a ceil-div, padded tail columns sit at ``cols >= S > length``).
+
+`decode_attention_quant` is the fused quantized-cache variant (DESIGN.md
+§Kernels): the K/V block specs carry *packed* int8 / nibble-packed int4 tiles
+plus per-chunk fp16 scale rows, and `kv_dequant.dequant_tile` expands them to
+fp32 inside the same streaming inner loop — one HBM pass at wire width
+instead of a standalone dequant pass writing model-width KV back to HBM.
 """
 from __future__ import annotations
 
@@ -18,11 +26,48 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .kv_dequant import dequant_tile
+
+# jax renamed TPUCompilerParams -> CompilerParams; accept either so the
+# kernels run on both sides of the rename (the capability probes in ops.py
+# still decide whether the surrounding build can execute them).
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 NEG_INF = float("-inf")
 
 
+def _attend_block(q, k, v, cols, length, sm_scale, m_scr, l_scr, acc_scr):
+    """One online-softmax update: q [H, dh] against a k/v tile [bs, KV, dh]
+    (fp32), masking ``cols >= length``.  Shared by the raw and the fused
+    quantized kernels — the only difference between them is how the tile got
+    into VMEM."""
+    H = q.shape[0]
+    KV = k.shape[1]
+    # logits[h, s] = q[h] . k[s, h // group]
+    qg = q.reshape(KV, H // KV, -1)
+    s = jnp.einsum("khd,skd->khs", qg, k) * sm_scale  # [KV, group, bs]
+    s = s.reshape(H, -1)
+    s = jnp.where(cols < length, s, NEG_INF)
+    # A ragged trailing block reads past S: interpret mode pads those rows
+    # with NaN (real TPUs with garbage).  The mask already zeroes their
+    # softmax weight, but 0 * NaN = NaN, so the padded v rows must be
+    # *selected* away, not multiplied away.
+    v = jnp.where((cols[0] < length)[:, None, None], v, 0.0)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, None]), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    pg = p.reshape(KV, H // KV, -1)
+    o = jnp.einsum("khs,skd->khd", pg, v).reshape(H, -1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + o
+    m_scr[...] = m_new
+
+
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            sm_scale: float, block_s: int, num_s: int, group: int):
+            sm_scale: float, block_s: int, num_s: int):
     b = pl.program_id(0)
     js = pl.program_id(1)
 
@@ -40,24 +85,9 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         q = q_ref[0].astype(jnp.float32)  # [H, dh]
         k = k_ref[0].astype(jnp.float32)  # [bs, KV, dh]
         v = v_ref[0].astype(jnp.float32)
-        H = q.shape[0]
-        KV = k.shape[1]
-        # logits[h, s] = q[h] . k[s, h // group]
-        qg = q.reshape(KV, group, -1)
-        s = jnp.einsum("khd,skd->khs", qg, k) * sm_scale  # [KV, group, bs]
-        s = s.reshape(H, -1)
-        cols = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(cols < length, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-        p = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, None]), 0.0)
-        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
-        pg = p.reshape(KV, group, -1)
-        o = jnp.einsum("khs,skd->khd", pg, v).reshape(p.shape[0], -1)
-        acc_scr[...] = acc_scr[...] * alpha[:, None] + o
-        m_scr[...] = m_new
+        cols = s_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_s), 1)
+        _attend_block(q, k, v, cols, length, sm_scale, m_scr, l_scr, acc_scr)
 
     @pl.when(js == num_s - 1)
     def _finalize():
@@ -70,13 +100,16 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512,
     """q: [B, H, dh]; caches: [B, S, KV, dh]; lengths: [B] -> [B, H, dh]."""
     B, H, dh = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
-    assert H % KV == 0 and S % block_s == 0
-    group = H // KV
-    num_s = S // block_s
+    assert H % KV == 0
+    block_s = min(block_s, S)
+    # ceil-div grid: a cache whose padded length is not a block multiple gets
+    # a ragged trailing block; its padded columns carry cols >= S >= length,
+    # so the existing lengths mask already excludes them.
+    num_s = -(-S // block_s)
     sm_scale = 1.0 / math.sqrt(dh)
 
     kernel = functools.partial(_kernel, sm_scale=sm_scale, block_s=block_s,
-                               num_s=num_s, group=group)
+                               num_s=num_s)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # lengths land in SMEM before the grid runs
         grid=(B, num_s),
@@ -98,7 +131,134 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# fused quantized-cache variant
+# ---------------------------------------------------------------------------
+def _quant_kernel(len_ref, q_ref, kq_ref, vq_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, block_s: int, num_s: int, bits: int,
+                  group: int):
+    b = pl.program_id(0)
+    js = pl.program_id(1)
+
+    @pl.when(js == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    s_start = js * block_s
+
+    @pl.when(s_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [H, dh]
+        # the only HBM bytes this tile moved are wire-width: packed ints +
+        # per-chunk fp16 scale rows; the fp32 expansion lives in VMEM only
+        k = dequant_tile(kq_ref[0], ks_ref[0], bits=bits, group=group)
+        v = dequant_tile(vq_ref[0], vs_ref[0], bits=bits, group=group)
+        cols = s_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_s), 1)
+        _attend_block(q, k, v, cols, length, sm_scale, m_scr, l_scr, acc_scr)
+
+    @pl.when(js == num_s - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l
+
+
+def quant_block_s(S: int, chunk_tokens: int, block_s: int) -> int:
+    """Largest usable cache block <= ``block_s``: the per-chunk scale rows
+    pin the block to either a whole number of chunks or a divisor of one
+    chunk, so scale tiles index with plain blocked arithmetic."""
+    G = chunk_tokens
+    block_s = min(block_s, S)
+    if block_s % G == 0 or G % block_s == 0:
+        return block_s
+    return max(G, (block_s // G) * G)
+
+
+def decode_attention_quant(q, k_q, v_q, k_scales, v_scales, lengths, *,
+                           bits: int, group: int, chunk_tokens: int,
+                           block_s: int = 512, return_residuals: bool = False,
+                           interpret: bool = False):
+    """Fused dequant + decode attention over a packed-resident cache.
+
+    q: [B, H, dh]; k_q/v_q: [B, S, KV, dh'] (int8, or uint8 nibble pairs with
+    dh' = dh/2 when ``bits == 4``); k_scales/v_scales: [B, S/G, W/group] fp16
+    per-chunk scale rows (W = KV*dh, G = ``chunk_tokens``); lengths: [B].
+
+    Returns [B, H, dh], or (out, m [B, H], l [B, H]) softmax residuals with
+    ``return_residuals`` so callers can merge against a disjoint key set
+    (the serving engines' fp-resident suffix segment).
+    """
+    B, H, dh = q.shape
+    S, KV, dhp = k_q.shape[1], k_q.shape[2], k_q.shape[3]
+    assert dh == (2 * dhp if bits == 4 else dhp), (dh, dhp, bits)
+    assert H % KV == 0
+    G = chunk_tokens
+    assert S % G == 0, (S, G)
+    NC = S // G
+    ng = (KV * dh) // group
+    assert k_scales.shape == (B, NC, ng), (k_scales.shape, (B, NC, ng))
+    assert v_scales.shape == (B, NC, ng)
+    block_s = quant_block_s(S, G, block_s)
+    num_s = -(-S // block_s)  # ragged tail handled by the lengths mask
+    # chunks per cache block (scale rows riding each tile)
+    cpb = max(1, block_s // G)
+    stride = max(1, G // block_s)  # cache blocks per chunk when G > block_s
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_quant_kernel, sm_scale=sm_scale,
+                               block_s=block_s, num_s=num_s, bits=bits,
+                               group=group)
+
+    def scale_idx(b, js, len_ref):
+        del len_ref
+        return (b, js if stride == 1 else js // stride, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, num_s),
+        in_specs=[
+            pl.BlockSpec((1, H, dh), lambda b, js, len_ref: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, KV, dhp),
+                         lambda b, js, len_ref: (b, js, 0, 0)),
+            pl.BlockSpec((1, block_s, KV, dhp),
+                         lambda b, js, len_ref: (b, js, 0, 0)),
+            pl.BlockSpec((1, cpb, ng), scale_idx),
+            pl.BlockSpec((1, cpb, ng), scale_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, dh), lambda b, js, len_ref: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, js, len_ref: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, js, len_ref: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, dh), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k_q, v_q, k_scales, v_scales)
+    return (out, m, l) if return_residuals else out

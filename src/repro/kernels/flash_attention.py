@@ -7,6 +7,15 @@ small enough that q/k/v/acc tiles fit VMEM:
     bq*dh + 2*bk*dh + bq*bk + bq*dh(acc)  ~  128*128*4 floats * few  « 16 MiB.
 GQA is folded into the k/v index_map (head h reads kv head h // (H//KV)), so
 no repeated-KV materialisation ever hits HBM.
+
+`flash_attention_quant` is the fused quantized-cache prefill variant
+(DESIGN.md §Kernels): K/V block specs carry packed int8 / nibble-packed int4
+tiles plus per-chunk fp16 scale rows, expanded to fp32 by
+`kv_dequant.dequant_tile` inside the streaming kv loop.  It takes the
+serving engines' native [B, S, heads, dh] layout, runs all H heads per grid
+step (the packed tile is shared across the GQA group anyway), and can return
+the (m, l) softmax residuals so a caller can merge its output with attention
+over a disjoint key set — the engines' fp-resident suffix segment.
 """
 from __future__ import annotations
 
@@ -17,6 +26,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .decode_attention import quant_block_s
+from .kv_dequant import dequant_tile
+
+# jax renamed TPUCompilerParams -> CompilerParams; accept either (see
+# decode_attention.py).
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
 
 NEG_INF = float("-inf")
 
@@ -104,7 +121,148 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# fused quantized-cache variant
+# ---------------------------------------------------------------------------
+def _quant_kernel(q_ref, kq_ref, vq_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref,
+                  m_scr, l_scr, acc_scr, *, causal: bool, sm_scale: float,
+                  block_q: int, block_k: int, num_k: int, q_offset: int,
+                  bits: int, group: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + iq * block_q
+    k_start = ik * block_k
+
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # [bq, H, dh]
+        k = dequant_tile(kq_ref[0], ks_ref[0], bits=bits, group=group)
+        v = dequant_tile(vq_ref[0], vs_ref[0], bits=bits, group=group)
+        bq, H, dh = q.shape
+        KV = k.shape[1]
+        qg = q.reshape(bq, KV, H // KV, dh)
+        s = jnp.einsum("qkgd,skd->qkgs", qg, k) * sm_scale
+        s = s.reshape(bq, H, block_k)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 1)
+            s = jnp.where((rows >= cols)[:, None, :], s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, :, None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=2)
+        pg = p.reshape(bq, KV, H // KV, block_k)
+        o = jnp.einsum("qkgs,skd->qkgd", pg, v).reshape(bq, H, dh)
+        acc_scr[...] = acc_scr[...] * alpha[:, :, None] + o
+        m_scr[...] = m_new
+
+    @pl.when(ik == num_k - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l, 1e-30)[:, :, None]).astype(o_ref.dtype)
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l
+
+
+def flash_attention_quant(q, k_q, v_q, k_scales, v_scales, *,
+                          bits: int, group: int, chunk_tokens: int,
+                          causal: bool = True, q_offset: int = 0,
+                          block_q: int = 128, block_k: int = 128,
+                          return_residuals: bool = False,
+                          interpret: bool = False):
+    """Fused dequant + flash attention over a packed-resident prefix.
+
+    q: [B, Sq, H, dh] (engine-native layout); k_q/v_q: [B, Sk, KV, dh']
+    (int8, or uint8 nibble pairs with dh' = dh/2 when ``bits == 4``);
+    k_scales/v_scales: [B, Sk/G, W/group] fp16 per-chunk scale rows
+    (W = KV*dh, G = ``chunk_tokens``).  ``q_offset`` places query row 0 at
+    absolute position ``q_offset`` for the causal mask (suffix queries over a
+    prefix cache).  Returns [B, Sq, H, dh], or (out, m [B, Sq, H],
+    l [B, Sq, H]) with ``return_residuals``.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, KV, dhp = k_q.shape[1], k_q.shape[2], k_q.shape[3]
+    assert dh == (2 * dhp if bits == 4 else dhp), (dh, dhp, bits)
+    assert H % KV == 0
+    G = chunk_tokens
+    assert Sk % G == 0, (Sk, G)
+    NC = Sk // G
+    ng = (KV * dh) // group
+    assert k_scales.shape == (B, NC, ng), (k_scales.shape, (B, NC, ng))
+    assert v_scales.shape == (B, NC, ng)
+    # Snap blocks to the actual extents: ragged query writes are not
+    # mask-coverable the way cache reads are, so block_q must divide Sq.
+    if Sq % block_q:
+        block_q = Sq
+    block_k = quant_block_s(Sk, G, block_k)
+    if Sk % block_k:
+        block_k = G
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    cpb = max(1, block_k // G)
+    stride = max(1, G // block_k)
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_quant_kernel, causal=causal,
+                               sm_scale=sm_scale, block_q=block_q,
+                               block_k=block_k, num_k=nk, q_offset=q_offset,
+                               bits=bits, group=group)
+
+    def scale_idx(b, iq, ik):
+        del iq
+        return (b, ik if stride == 1 else ik // stride, 0)
+
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, H, dh), lambda b, iq, ik: (b, iq, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, dhp),
+                         lambda b, iq, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, dhp),
+                         lambda b, iq, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, cpb, ng), scale_idx),
+            pl.BlockSpec((1, cpb, ng), scale_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, H, dh), lambda b, iq, ik: (b, iq, 0, 0)),
+            pl.BlockSpec((1, block_q, H), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_q, H), lambda b, iq, ik: (b, iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sq, H, dh), q.dtype),
+            jax.ShapeDtypeStruct((B, Sq, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sq, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, H), jnp.float32),
+            pltpu.VMEM((block_q, H), jnp.float32),
+            pltpu.VMEM((block_q, H, dh), jnp.float32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k_q, v_q, k_scales, v_scales)
+    return (out, m, l) if return_residuals else out

@@ -31,11 +31,34 @@ from jax.experimental import pallas as pl
 
 
 def _expand_scales(s, group: int):
-    """[1, W/group] fp16 scale row → [1, W] fp32, inside the kernel body."""
+    """[n, W/group] fp16 scale rows → [n, W] fp32, inside the kernel body."""
     s = s.astype(jnp.float32)
     if group == 1:
         return s
     return jnp.repeat(s, group, axis=-1)
+
+
+def dequant_tile(q, s, *, bits: int, group: int):
+    """Dequantize one [rows, KV, dh'] cache tile against [ncb, ng] per-chunk
+    scale rows, inside a kernel body (the shared inner loop of the fused
+    quantized-KV attention kernels).
+
+    ``rows`` must span ``ncb`` whole scale windows (rows % ncb == 0): tile row
+    r uses scale row r // (rows // ncb).  ``bits == 4`` unpacks the biased
+    nibbles first (pairwise along the flattened KV*dh channel axis, the
+    `codec.ref.pack_int4` layout), so dh' is dh/2 for packed tiles.  Returns
+    fp32 [rows, KV, dh]."""
+    rows, KV = q.shape[0], q.shape[1]
+    if bits == 4:
+        lo = (q & 0xF).astype(jnp.int32) - 8
+        hi = (q >> 4).astype(jnp.int32) - 8
+        q = jnp.stack([lo, hi], axis=-1).reshape(rows, KV, 2 * q.shape[2])
+    q = q.astype(jnp.float32)
+    dh = q.shape[2]
+    ncb = s.shape[0]
+    sw = _expand_scales(s, group)  # [ncb, KV*dh]
+    out = q.reshape(ncb, rows // ncb, KV * dh) * sw[:, None, :]
+    return out.reshape(rows, KV, dh)
 
 
 def _dequant_kernel(q_ref, s_ref, o_ref, *, group: int):

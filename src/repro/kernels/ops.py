@@ -3,37 +3,59 @@
 On CPU (this container) the kernels execute in interpret mode — the kernel
 body runs in Python per grid step, which validates the tiling and semantics;
 on TPU backends they compile to Mosaic.  ``interpret`` is resolved once per
-call site from the default backend unless overridden.
+call site by `_default_interpret()` unless overridden — every op here goes
+through that single probe, so the `REPRO_PALLAS_INTERPRET` env override
+below governs the whole kernel surface uniformly.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from .decode_attention import decode_attention as _decode
+from .decode_attention import decode_attention_quant as _decode_quant
 from .flash_attention import flash_attention as _flash
+from .flash_attention import flash_attention_quant as _flash_quant
 from .kv_dequant import kv_dequant as _dequant
 from .kv_dequant import kv_dequant_packed4 as _dequant_p4
 from .kv_gather import kv_gather as _gather
 
+_TRUTHY = frozenset({"1", "true", "yes", "on"})
+_FALSY = frozenset({"0", "false", "no", "off"})
+
 
 def _default_interpret() -> bool:
+    """One probe for every op: interpret off on real TPU backends, on
+    everywhere else, with `REPRO_PALLAS_INTERPRET=1|0` as an explicit
+    override (read per call so tests can monkeypatch the environment)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
     return jax.default_backend() != "tpu"
 
 
 @functools.cache
-def dequant_supported() -> bool:
-    """Capability probe for the fused dequant kernels (run once, cached).
+def dequant_supported(fused: bool = False) -> bool:
+    """Capability probe for the dequant kernels (run once per flavor, cached).
 
     Mirrors the test-suite probe: actually execute a trivial call rather than
-    sniff versions.  The dequant kernels avoid the Pallas-TPU-only API
-    surface, so they normally pass even on CPU-only builds (interpret mode);
-    the serving client falls back to the numpy reference when they don't.
-    Probes the group-wise scale path too — a build where only the grouped
-    broadcast fails must fall back for every codec rather than crash on the
-    first gw/mixed payload."""
+    sniff versions.  The standalone dequant kernels avoid the Pallas-TPU-only
+    API surface, so they normally pass even on CPU-only builds (interpret
+    mode); the serving client falls back to the numpy reference when they
+    don't.  Probes the group-wise scale path too — a build where only the
+    grouped broadcast fails must fall back for every codec rather than crash
+    on the first gw/mixed payload.
+
+    ``fused=True`` additionally probes the fused quantized-KV *attention*
+    kernels (decode + flash, int8 and packed-int4, grouped scales) — they
+    touch more of the Pallas surface (scalar prefetch, compiler params,
+    multi-output), so a build can support standalone dequant but not fusion;
+    the engines then stay on the composed path."""
     try:
         q = jnp.zeros((1, 2, 4), jnp.int8)
         qp = jnp.zeros((1, 2, 2), jnp.uint8)
@@ -43,9 +65,33 @@ def dequant_supported() -> bool:
         kv_dequant_packed4_op(qp, s)
         kv_dequant_op(q, sg, group=2)
         kv_dequant_packed4_op(qp, sg, group=2)
+        if not fused:
+            return True
+        # B=1, H=2, KV=1, dh=4 (W=4), S=8, chunk_tokens=4, group=2
+        qd = jnp.zeros((1, 2, 4), jnp.float32)
+        k8 = jnp.zeros((1, 8, 1, 4), jnp.int8)
+        k4 = jnp.zeros((1, 8, 1, 2), jnp.uint8)
+        sc = jnp.ones((1, 2, 2), jnp.float16)
+        ln = jnp.array([8], jnp.int32)
+        decode_attention_quant_op(qd, k8, k8, sc, sc, ln, bits=8, group=2,
+                                  chunk_tokens=4, block_s=4)
+        decode_attention_quant_op(qd, k4, k4, sc, sc, ln, bits=4, group=2,
+                                  chunk_tokens=4, block_s=4)
+        qf = jnp.zeros((1, 4, 2, 4), jnp.float32)
+        flash_attention_quant_op(qf, k8, k8, sc, sc, bits=8, group=2,
+                                 chunk_tokens=4, causal=True, q_offset=4,
+                                 block_q=4, block_k=4)
+        flash_attention_quant_op(qf, k4, k4, sc, sc, bits=4, group=2,
+                                 chunk_tokens=4, causal=False,
+                                 block_q=4, block_k=4)
         return True
     except Exception:  # pragma: no cover - environment dependent
         return False
+
+
+def fused_attention_supported() -> bool:
+    """Can this build run the fused quantized-KV attention kernels?"""
+    return dequant_supported(fused=True)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -63,6 +109,38 @@ def decode_attention_op(q, k_cache, v_cache, lengths, *, block_s: int = 512,
     interpret = _default_interpret() if interpret is None else interpret
     return _decode(q, k_cache, v_cache, lengths, block_s=block_s,
                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group", "chunk_tokens", "block_s", "return_residuals",
+    "interpret"))
+def decode_attention_quant_op(q, k_q, v_q, k_scales, v_scales, lengths, *,
+                              bits: int, group: int, chunk_tokens: int,
+                              block_s: int = 512,
+                              return_residuals: bool = False,
+                              interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _decode_quant(q, k_q, v_q, k_scales, v_scales, lengths, bits=bits,
+                         group=group, chunk_tokens=chunk_tokens,
+                         block_s=block_s, return_residuals=return_residuals,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group", "chunk_tokens", "causal", "q_offset", "block_q",
+    "block_k", "return_residuals", "interpret"))
+def flash_attention_quant_op(q, k_q, v_q, k_scales, v_scales, *, bits: int,
+                             group: int, chunk_tokens: int,
+                             causal: bool = True, q_offset: int = 0,
+                             block_q: int = 128, block_k: int = 128,
+                             return_residuals: bool = False,
+                             interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_quant(q, k_q, v_q, k_scales, v_scales, bits=bits,
+                        group=group, chunk_tokens=chunk_tokens, causal=causal,
+                        q_offset=q_offset, block_q=block_q, block_k=block_k,
+                        return_residuals=return_residuals,
+                        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

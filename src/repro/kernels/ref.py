@@ -54,6 +54,69 @@ def ref_kv_dequant_packed4(q_packed, scales) -> jnp.ndarray:
     return q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None, :]
 
 
+def ref_dequant_cache(q, scales, *, bits: int, group: int,
+                      chunk_tokens: int) -> jnp.ndarray:
+    """Expand a packed-resident cache to fp32: q [B, S, KV, dh'] (int8, or
+    uint8 nibble pairs with dh' = dh/2 when ``bits == 4``) against per-chunk
+    scale rows [B, S/G, W/group] fp16 → [B, S, KV, dh].
+
+    Pure jnp and jittable — this is both the fused-attention oracle's dequant
+    half and the engines' composed fallback when the fused kernels fail the
+    capability probe (dequant here, then the plain attention path)."""
+    B, S, KV = q.shape[0], q.shape[1], q.shape[2]
+    if bits == 4:
+        lo = (q & 0xF).astype(jnp.int32) - 8
+        hi = (q >> 4).astype(jnp.int32) - 8
+        q = jnp.stack([lo, hi], axis=-1).reshape(B, S, KV, 2 * q.shape[3])
+    q = q.astype(jnp.float32)
+    dh = q.shape[3]
+    W = KV * dh
+    G = chunk_tokens
+    NC = S // G
+    sw = jnp.repeat(scales.astype(jnp.float32), group, axis=-1)  # [B,NC,W]
+    out = q.reshape(B, NC, G, W) * sw[:, :, None, :]
+    return out.reshape(B, S, KV, dh)
+
+
+def ref_decode_attention_quant(q, k_q, v_q, k_scales, v_scales, lengths, *,
+                               bits: int, group: int,
+                               chunk_tokens: int) -> jnp.ndarray:
+    """Composed oracle for `decode_attention_quant`: dequantize the packed
+    cache (codec.ref semantics), then the plain decode oracle."""
+    k = ref_dequant_cache(k_q, k_scales, bits=bits, group=group,
+                          chunk_tokens=chunk_tokens)
+    v = ref_dequant_cache(v_q, v_scales, bits=bits, group=group,
+                          chunk_tokens=chunk_tokens)
+    return ref_decode_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                                lengths)
+
+
+def ref_flash_attention_quant(q, k_q, v_q, k_scales, v_scales, *, bits: int,
+                              group: int, chunk_tokens: int,
+                              causal: bool = True,
+                              q_offset: int = 0) -> jnp.ndarray:
+    """Composed oracle for `flash_attention_quant` (engine-native
+    [B, Sq, H, dh] query layout; see that kernel for the ``q_offset``
+    causal-mask convention)."""
+    B, Sq, H, dh = q.shape
+    k = ref_dequant_cache(k_q, k_scales, bits=bits, group=group,
+                          chunk_tokens=chunk_tokens)
+    v = ref_dequant_cache(v_q, v_scales, bits=bits, group=group,
+                          chunk_tokens=chunk_tokens)
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)  # [B, Sk, H, dh]
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bqhs", q.astype(jnp.float32), k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    if causal:
+        rows = q_offset + jnp.arange(Sq)[:, None]
+        cols = jnp.arange(Sk)[None, :]
+        logits = jnp.where((rows >= cols)[None, :, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqhs,bshd->bqhd", probs, v).astype(q.dtype)
+
+
 def ref_kv_gather(pool, indices) -> jnp.ndarray:
     """pool: [P, G, W]; indices: [N] -> out [N, G, W].
 

@@ -267,6 +267,169 @@ def attention(p, cfg: ModelConfig, x, *, positions, causal: bool = True,
     return out, seg_kv
 
 
+def attention_partials(q, k, v, mask, softcap: float = 0.0):
+    """Softmax attention over one key segment, returning partials.
+
+    q: [B,Sq,H,dh], k/v: [B,Sk,H,dh] (heads already repeated), mask
+    broadcastable to [B,1,Sq,Sk].  Returns (o, m, l): the *normalized* fp32
+    output [B,Sq,H,dh] plus the running-softmax residuals m/l [B,Sq,H], so
+    attention over disjoint key segments (e.g. a packed-resident prefix and
+    an fp suffix) composes exactly via `merge_attention_partials` — the same
+    (m, l) contract the fused Pallas kernels emit with return_residuals."""
+    dh = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)  # [B,H,Sq]
+    safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(jnp.isfinite(logits), jnp.exp(logits - safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-30)[..., None].swapaxes(1, 2)
+    return o, m.swapaxes(1, 2), l.swapaxes(1, 2)  # [B,Sq,H,dh], [B,Sq,H] x2
+
+
+def merge_attention_partials(parts):
+    """Combine per-segment (o, m, l) partials into the exact full softmax.
+
+    Each part: o [..., H, dh] normalized, m/l [..., H] (any matching leading
+    shape — prefill [B,Sq,H] and decode [B,H] both work).  Standard
+    log-sum-exp merge: with global max m_g, each segment re-weights by
+    exp(m - m_g) * l."""
+    m_g = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_g = jnp.maximum(m_g, m)
+    num = 0.0
+    denom = 0.0
+    for o, m, l in parts:
+        w = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0) * l
+        num = num + w[..., None] * o.astype(jnp.float32)
+        denom = denom + w
+    return num / jnp.maximum(denom, 1e-30)[..., None]
+
+
+def attention_packed_prefix(p, cfg: ModelConfig, x, packed_kv, *, positions,
+                            bits: int, group: int, chunk_tokens: int,
+                            use_fused: bool, interpret=None):
+    """Suffix attention over a *quantized-resident* prefix (prefill form).
+
+    ``packed_kv``: (k_q, v_q, k_scales, v_scales) — the wire image of the
+    prefix as `serving.kv_chunks.PackedLayerKV.as_tuple()` yields it (passed
+    as a bare tuple so this module never imports the serving layer).  The
+    prefix half runs the fused `flash_attention_quant` kernel when
+    ``use_fused`` (capability-probed by the caller), else the composed
+    `ref_dequant_cache` + `attention_partials` fallback; the suffix half is
+    ordinary causal attention over this segment's own fp KV; the two merge
+    exactly via the softmax residuals.  Requires ``cfg.logit_softcap == 0``
+    (the fused kernels don't implement softcap).
+
+    Returns (out [B,S,d], seg_kv) exactly like `attention`.
+    """
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.ref import ref_dequant_cache
+
+    B, S, _ = x.shape
+    H, KV, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k_q, v_q, k_scales, v_scales = packed_kv
+    q, k, v = project_qkv(p, cfg, x)
+    # packed prefixes always carry RoPE'd KV (they were committed post-RoPE)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    seg_kv = (k, v)
+    P = k_q.shape[1]
+    if k_q.shape[0] != B:
+        k_q, v_q, k_scales, v_scales = (
+            jnp.broadcast_to(a, (B,) + a.shape[1:])
+            for a in (k_q, v_q, k_scales, v_scales))
+    if use_fused:
+        # every prefix position precedes every suffix query: non-causal
+        o_p, m_p, l_p = kernel_ops.flash_attention_quant_op(
+            q, k_q, v_q, k_scales, v_scales, bits=bits, group=group,
+            chunk_tokens=chunk_tokens, causal=False, return_residuals=True,
+            interpret=interpret)
+        o_p = o_p.astype(jnp.float32)
+    else:
+        kf = ref_dequant_cache(k_q, k_scales, bits=bits, group=group,
+                               chunk_tokens=chunk_tokens)
+        vf = ref_dequant_cache(v_q, v_scales, bits=bits, group=group,
+                               chunk_tokens=chunk_tokens)
+        o_p, m_p, l_p = attention_partials(
+            q.astype(jnp.float32), _repeat_kv(kf, H // KV),
+            _repeat_kv(vf, H // KV), jnp.ones((1, 1, S, P), bool))
+    iq = jnp.arange(S)[:, None]
+    mask = (jnp.arange(S)[None, :] <= iq)[None, None]
+    kr = _repeat_kv(k, H // KV).astype(jnp.float32)
+    vr = _repeat_kv(v, H // KV).astype(jnp.float32)
+    o_s, m_s, l_s = attention_partials(q.astype(jnp.float32), kr, vr, mask)
+    out = merge_attention_partials([(o_p, m_p, l_p), (o_s, m_s, l_s)])
+    out = linear(p["wo"], out.astype(x.dtype).reshape(B, S, H * dh))
+    return out, seg_kv
+
+
+def decode_attention_packed_prefix(p, cfg: ModelConfig, x, packed_kv,
+                                   sk_cache, sv_cache, pos, *, bits: int,
+                                   group: int, chunk_tokens: int,
+                                   use_fused: bool, interpret=None):
+    """One-token attention over packed prefix + fp suffix cache.
+
+    The decode form of `attention_packed_prefix`: the prefix stays
+    quantized-resident (read by the fused `decode_attention_quant` kernel or
+    the composed fallback); only this request's *suffix* lives in an fp
+    cache [B, S_suf, KV, dh], written at ``pos - P`` like
+    `decode_attention` writes at ``pos``.  Returns (out [B,1,d],
+    (sk_cache, sv_cache))."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.ref import ref_dequant_cache
+
+    B = x.shape[0]
+    H, KV, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k_q, v_q, k_scales, v_scales = packed_kv
+    P = k_q.shape[1]
+    q, k, v = project_qkv(p, cfg, x)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    spos = pos - P  # suffix-local write slot
+
+    def upd(cache, new):
+        return jax.vmap(
+            lambda c, n, p_: jax.lax.dynamic_update_slice(c, n, (p_, 0, 0))
+        )(cache, new, spos)
+
+    sk_cache = upd(sk_cache, k.astype(sk_cache.dtype))
+    sv_cache = upd(sv_cache, v.astype(sv_cache.dtype))
+    if k_q.shape[0] != B:
+        k_q, v_q, k_scales, v_scales = (
+            jnp.broadcast_to(a, (B,) + a.shape[1:])
+            for a in (k_q, v_q, k_scales, v_scales))
+    if use_fused:
+        lengths = jnp.full((B,), P, jnp.int32)
+        o_p, m_p, l_p = kernel_ops.decode_attention_quant_op(
+            q[:, 0], k_q, v_q, k_scales, v_scales, lengths, bits=bits,
+            group=group, chunk_tokens=chunk_tokens, return_residuals=True,
+            interpret=interpret)
+        o_p = o_p.astype(jnp.float32)[:, None]  # [B,1,H,dh]
+        m_p, l_p = m_p[:, None], l_p[:, None]
+    else:
+        kf = ref_dequant_cache(k_q, k_scales, bits=bits, group=group,
+                               chunk_tokens=chunk_tokens)
+        vf = ref_dequant_cache(v_q, v_scales, bits=bits, group=group,
+                               chunk_tokens=chunk_tokens)
+        o_p, m_p, l_p = attention_partials(
+            q.astype(jnp.float32), _repeat_kv(kf, H // KV),
+            _repeat_kv(vf, H // KV), jnp.ones((1, 1, 1, P), bool))
+    Ss = sk_cache.shape[1]
+    mask = (jnp.arange(Ss)[None, :] <= spos[:, None])[:, None, None, :]
+    o_s, m_s, l_s = attention_partials(
+        q.astype(jnp.float32),
+        _repeat_kv(sk_cache.astype(jnp.float32), H // KV),
+        _repeat_kv(sv_cache.astype(jnp.float32), H // KV), mask)
+    out = merge_attention_partials([(o_p, m_p, l_p), (o_s, m_s, l_s)])
+    out = linear(p["wo"], out.astype(x.dtype).reshape(B, 1, H * dh))
+    return out, (sk_cache, sv_cache)
+
+
 def _decode_scores_blocked(q, k_cache, v_cache, pos, n_blocks: int):
     """Flash-decoding expressed in shardable XLA ops (§Perf optimization O3).
 

@@ -48,8 +48,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codec import get_codec
 from repro.core import Delivery
 from repro.core.hashing import chunk_keys
+from repro.kernels import ops as kernel_ops
 from repro.core.transport import (LOCAL_DRAM, RDMA_SESSION_SETUP_S,
                                   S3_RDMA_AGG, TransportProfile, VirtualClock)
 from repro.cluster.events import Event, EventKind, EventQueue
@@ -59,7 +61,8 @@ from repro.obs.metrics import MetricsRegistry
 
 from .batching import ContinuousBatcher, SlotRequest
 from .engine import EngineStats, ModelRunner
-from .kv_chunks import cache_to_chunks, layer_payload_to_device_kv
+from .kv_chunks import (cache_to_chunks, layer_payload_to_device_kv,
+                        layer_payload_to_packed_kv, packed_layer_to_fp)
 from .orchestrator import Orchestrator
 
 _NEG_INF = float("-inf")
@@ -135,6 +138,9 @@ class _Flight:
     positions: object = None
     segs_k: list = dataclasses.field(default_factory=list)
     segs_v: list = dataclasses.field(default_factory=list)
+    # quantized-resident prefix (kv_resident="packed"): one PackedLayerKV per
+    # layer; segs_k/segs_v then hold only this request's *suffix* KV
+    packed_layers: list = dataclasses.field(default_factory=list)
     wall_compute_s: float = 0.0
     wall_dequant_s: float = 0.0
 
@@ -166,7 +172,8 @@ class AsyncEngine:
                  metrics: Optional[MetricsRegistry] = None,
                  tracer=None,
                  monitor=None,
-                 slo=None) -> None:
+                 slo=None,
+                 kv_resident: str = "fp") -> None:
         self.model = model
         self.params = params
         self.orch = orch
@@ -199,6 +206,29 @@ class AsyncEngine:
         self._layerwise_ok = (self.cfg.family in ("dense", "vlm")
                               or (self.cfg.family == "moe"
                                   and self.cfg.moe_every == 1))
+        # same residency contract as ServingEngine: "packed" keeps layerwise
+        # prefixes quantized-resident through prefill (fused dequant-attention
+        # or the composed fallback); the ContinuousBatcher pools sequences
+        # into one fp cache, so a packed prefix entering decode is expanded
+        # exactly once at the `packed_layer_to_fp` boundary.
+        if kv_resident not in ("fp", "packed"):
+            raise ValueError(f"kv_resident must be 'fp' or 'packed', "
+                             f"got {kv_resident!r}")
+        if kv_resident == "packed":
+            if get_codec(self.spec.codec).lossless:
+                raise ValueError(
+                    f"kv_resident='packed' needs a quantized codec, "
+                    f"got {self.spec.codec!r}")
+            if self.cfg.family not in ("dense", "vlm"):
+                raise ValueError(
+                    f"kv_resident='packed' supports dense/vlm families, "
+                    f"got {self.cfg.family!r}")
+            if self.cfg.logit_softcap:
+                raise ValueError("kv_resident='packed' requires "
+                                 "logit_softcap == 0 (fused kernels don't "
+                                 "implement softcap)")
+        self.kv_resident = kv_resident
+        self._use_fused = kernel_ops.dequant_supported(fused=True)
         self.batcher: Optional[ContinuousBatcher] = None
         self.peak_transfers = 0  # max concurrently in-flight fetches observed
 
@@ -494,18 +524,36 @@ class AsyncEngine:
         act = jnp.dtype(self.cfg.compute_dtype)
         wall = fl.req.req_id + "/wall"
         t0 = time.perf_counter()
-        k_d, v_d = layer_payload_to_device_kv(
-            fl.payloads[l], fl.n_fetch, self.spec, act, layer=l)
-        t1 = time.perf_counter()
-        fl.wall_dequant_s += t1 - t0
-        pk, pv = k_d[None], v_d[None]
-        x, sk, sv = self.runner._layer(self.runner.layer_params(l), fl.x,
-                                       pk, pv, fl.positions)
-        fl.x = jax.block_until_ready(x)
-        t2 = time.perf_counter()
-        fl.wall_compute_s += t2 - t1
-        fl.segs_k.append(jnp.concatenate([pk, sk], axis=1))
-        fl.segs_v.append(jnp.concatenate([pv, sv], axis=1))
+        if self.kv_resident == "packed":
+            # wire image straight onto the device; no standalone dequant pass
+            pkv = layer_payload_to_packed_kv(fl.payloads[l], fl.n_fetch,
+                                             self.spec, layer=l)
+            fl.packed_layers.append(pkv)
+            t1 = time.perf_counter()
+            fl.wall_dequant_s += t1 - t0
+            x, sk, sv = self.runner._layer_packed(
+                self.runner.layer_params(l), fl.x, pkv.as_tuple(),
+                fl.positions, bits=pkv.bits, group=pkv.group,
+                chunk_tokens=pkv.chunk_tokens, use_fused=self._use_fused,
+                interpret=None)
+            fl.x = jax.block_until_ready(x)
+            t2 = time.perf_counter()
+            fl.wall_compute_s += t2 - t1
+            fl.segs_k.append(sk)  # suffix only: the prefix stays packed
+            fl.segs_v.append(sv)
+        else:
+            k_d, v_d = layer_payload_to_device_kv(
+                fl.payloads[l], fl.n_fetch, self.spec, act, layer=l)
+            t1 = time.perf_counter()
+            fl.wall_dequant_s += t1 - t0
+            pk, pv = k_d[None], v_d[None]
+            x, sk, sv = self.runner._layer(self.runner.layer_params(l), fl.x,
+                                           pk, pv, fl.positions)
+            fl.x = jax.block_until_ready(x)
+            t2 = time.perf_counter()
+            fl.wall_compute_s += t2 - t1
+            fl.segs_k.append(jnp.concatenate([pk, sk], axis=1))
+            fl.segs_v.append(jnp.concatenate([pv, sv], axis=1))
         if self.tracer is not None:
             self.tracer.span_at(wall, "dequant", t0, t1, cat="engine",
                                 layer=l)
@@ -534,6 +582,7 @@ class AsyncEngine:
             lg = self.runner._final(self.runner.params, fl.x)
             cache = jnp.stack([jnp.stack([k, v])
                                for k, v in zip(fl.segs_k, fl.segs_v)])
+        packed = bool(fl.packed_layers)  # layerwise with a packed prefix
         lg = np.asarray(jax.block_until_ready(lg)[0], np.float32)
         dt = time.perf_counter() - t0
         fl.wall_compute_s += dt
@@ -541,9 +590,13 @@ class AsyncEngine:
             self.tracer.span_at(ev.req_id + "/wall", "compute", t0, t0 + dt,
                                 cat="engine")
         # write-behind commit in virtual event order: later arrivals sharing
-        # the prefix hit what this request just produced
+        # the prefix hit what this request just produced.  A packed prefix
+        # commits suffix chunks only — its prefix objects are already in the
+        # store under the same content-addressed keys (that's why they
+        # matched), and `orch.commit` uploads only the keys handed to it.
         keys_all = chunk_keys(tokens, self.spec.chunk_tokens)
-        objs = cache_to_chunks(np.asarray(cache), keys_all, self.spec)
+        keys = keys_all[fl.n_fetch:] if packed else keys_all
+        objs = cache_to_chunks(np.asarray(cache), keys, self.spec)
         new = self.orch.commit(tokens, objs)
         self.stats.add(commits=len(new),
                        prefix_tokens_reused=fl.P,
@@ -562,7 +615,18 @@ class AsyncEngine:
             ev.req_id, lg, [], fl.P, fl.delivery, rec,
             fl.wall_compute_s, fl.wall_dequant_s)
         if fl.req.max_new_tokens > 0:
+            if packed:
+                # the packed->batcher boundary: decode slots pool sequences
+                # into one fp cache, so the prefix is expanded exactly once
+                # here, only for requests that actually decode
+                cache = self._materialize_packed(fl, cache)
             self._enqueue_decode(fl, lg, cache)
+
+    def _materialize_packed(self, fl: _Flight, seg_cache) -> jnp.ndarray:
+        act = jnp.dtype(self.cfg.compute_dtype)
+        prefix = jnp.stack([jnp.stack(packed_layer_to_fp(pkv, act))
+                            for pkv in fl.packed_layers])  # [L,2,1,P,KV,dh]
+        return jnp.concatenate([prefix, seg_cache.astype(act)], axis=3)
 
     def _emit_request_summary(self, fl: _Flight, done: float) -> None:
         """Same ``"request"`` summary vocabulary as `ClusterSim` — one

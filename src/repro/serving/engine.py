@@ -41,8 +41,11 @@ from repro.models import dense, moe
 from repro.models import layers as nn
 from repro.obs.metrics import MetricsRegistry
 
+from repro.codec import get_codec
+from repro.kernels import ops as kernel_ops
+
 from .kv_chunks import (cache_to_chunks, layer_payload_to_device_kv,
-                        layer_payload_to_kv)
+                        layer_payload_to_kv, layer_payload_to_packed_kv)
 from .orchestrator import Orchestrator
 
 
@@ -115,6 +118,36 @@ class ModelRunner:
             h = nn.rmsnorm(params["final_norm"], x[:, -1:, :])
             return nn.logits(params["embed"], cfg, h)[:, 0, :]
 
+        def layer_packed_fn(layer_p, x, packed_kv, positions, *, bits, group,
+                            chunk_tokens, use_fused, interpret):
+            h, seg = dense.block_packed(layer_p, cfg, x, positions, packed_kv,
+                                        bits=bits, group=group,
+                                        chunk_tokens=chunk_tokens,
+                                        use_fused=use_fused,
+                                        interpret=interpret)
+            return h, seg[0], seg[1]
+
+        def decode_packed_fn(params, packed_all, sk_cache, sv_cache, token,
+                             pos, *, bits_map, group_map, chunk_tokens,
+                             use_fused, interpret):
+            # Python-unrolled layer loop: per-layer bits/groups are static
+            # (mixed-bit codecs give layers different packed dtypes/shapes),
+            # which rules out a lax.scan over a stacked cache.
+            x = nn.embed(params["embed"], cfg, token)
+            new_k, new_v = [], []
+            for l in range(cfg.num_layers):
+                layer_p = jax.tree.map(lambda a: a[l], params["layers"])
+                x, k_c, v_c = dense.decode_block_packed(
+                    layer_p, cfg, x, packed_all[l], sk_cache[l], sv_cache[l],
+                    pos, bits=bits_map[l], group=group_map[l],
+                    chunk_tokens=chunk_tokens, use_fused=use_fused,
+                    interpret=interpret)
+                new_k.append(k_c)
+                new_v.append(v_c)
+            x = nn.rmsnorm(params["final_norm"], x)
+            lg = nn.logits(params["embed"], cfg, x)[:, 0, :]
+            return lg, jnp.stack(new_k), jnp.stack(new_v)
+
         self._embed = jax.jit(embed_fn)
         self._layer = jax.jit(layer_fn)
         self._layer_nopre = jax.jit(layer_fn_nopre)
@@ -125,6 +158,13 @@ class ModelRunner:
             static_argnames=("n",))
         self._decode = jax.jit(lambda p, c, t, pos:
                                model.decode_step(p, c, t, pos))
+        self._layer_packed = jax.jit(
+            layer_packed_fn, static_argnames=("bits", "group", "chunk_tokens",
+                                              "use_fused", "interpret"))
+        self._decode_packed = jax.jit(
+            decode_packed_fn, static_argnames=("bits_map", "group_map",
+                                               "chunk_tokens", "use_fused",
+                                               "interpret"))
 
     def layer_params(self, l: int):
         return jax.tree.map(lambda a: a[l], self.params["layers"])
@@ -144,7 +184,8 @@ class ServingEngine:
     def __init__(self, model: Model, params, orch: Orchestrator, *,
                  max_decode_len: int = 64, sync_commit: bool = True,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer=None, runner: Optional[ModelRunner] = None) -> None:
+                 tracer=None, runner: Optional[ModelRunner] = None,
+                 kv_resident: str = "fp") -> None:
         self.model = model
         self.params = params
         self.orch = orch
@@ -152,6 +193,30 @@ class ServingEngine:
         self.spec = orch.spec
         self.sync_commit = sync_commit
         self.max_decode_len = max_decode_len
+        # "fp" expands fetched prefixes to model width on arrival (the
+        # historical path); "packed" keeps them quantized-resident and
+        # dispatches the fused dequant-attention kernels (DESIGN.md
+        # §Kernels), falling back to the composed jnp path when the build
+        # fails the fused capability probe.
+        if kv_resident not in ("fp", "packed"):
+            raise ValueError(f"kv_resident must be 'fp' or 'packed', "
+                             f"got {kv_resident!r}")
+        if kv_resident == "packed":
+            if get_codec(self.spec.codec).lossless:
+                raise ValueError(
+                    f"kv_resident='packed' needs a quantized codec, "
+                    f"got {self.spec.codec!r}")
+            if self.cfg.family not in ("dense", "vlm"):
+                raise ValueError(
+                    f"kv_resident='packed' supports dense/vlm families, "
+                    f"got {self.cfg.family!r}")
+            if self.cfg.logit_softcap:
+                raise ValueError("kv_resident='packed' requires "
+                                 "logit_softcap == 0 (fused kernels don't "
+                                 "implement softcap)")
+        self.kv_resident = kv_resident
+        self._use_fused = kernel_ops.dequant_supported(fused=True)
+        self._last_packed = None
         # one registry per serving stack: default to the orchestrator's so
         # engine + orch counters snapshot as a single consistent cut
         self.metrics = metrics if metrics is not None else orch.metrics
@@ -258,6 +323,7 @@ class ServingEngine:
             self.tracer.span_at(req_id, "compute", t0, t0 + dt, cat="engine")
         self._commit(tokens, cache, req_id)
         self._last_cache = cache
+        self._last_packed = None
         return RequestResult(req_id, lg, [], 0, None, dt, dt, 0.0, [])
 
     def _fetch(self, plan, n_chunks, req_id):
@@ -281,10 +347,17 @@ class ServingEngine:
         ttft = res.completion_s + dt  # Fig. 7a: transfer then compute
         self._commit(tokens, cache, req_id)
         self._last_cache = cache
+        # chunkwise stays fp-resident: the whole prefix must be on device
+        # before prefill starts anyway, so there is no residency window to
+        # shrink (DESIGN.md §Kernels)
+        self._last_packed = None
         return RequestResult(req_id, lg, [], P, Delivery.CHUNKWISE, ttft, dt,
                              res.completion_s, [])
 
     def _serve_layerwise(self, tokens, plan, n_chunks, P, req_id) -> RequestResult:
+        if self.kv_resident == "packed":
+            return self._serve_layerwise_packed(tokens, plan, n_chunks, P,
+                                                req_id)
         cfg = self.cfg
         tracer = self.tracer
         res = self._fetch(plan, n_chunks, req_id)
@@ -327,6 +400,69 @@ class ServingEngine:
         cache = jnp.stack([jnp.stack([k, v]) for k, v in zip(segs_k, segs_v)])
         self._commit(tokens, cache, req_id)
         self._last_cache = cache
+        self._last_packed = None
+        return RequestResult(req_id, lg, [], P, Delivery.LAYERWISE, ttft,
+                             sum(compute_times) + final_dt, res.completion_s,
+                             stalls)
+
+    def _serve_layerwise_packed(self, tokens, plan, n_chunks, P, req_id
+                                ) -> RequestResult:
+        """`_serve_layerwise` with the prefix kept quantized-resident.
+
+        Each layer's payload is uploaded as its wire image
+        (`layer_payload_to_packed_kv` — packed ints + fp16 scale rows, no
+        standalone dequant pass) and attention reads it through the fused
+        kernels (or the composed jnp fallback).  Only this request's suffix
+        KV is ever materialized at model width, so HBM residency for the
+        reused prefix is wire-sized end to end, and the suffix is all the
+        engine needs to commit (prefix chunks are already content-addressed
+        in the store — that's why they matched)."""
+        cfg = self.cfg
+        tracer = self.tracer
+        res = self._fetch(plan, n_chunks, req_id)
+        suffix = jnp.asarray(tokens[P:])[None, :]
+        positions = P + jnp.arange(suffix.shape[1])[None, :]
+        x = self._embed(self.params["embed"], suffix, positions)
+        packed_layers, segs_k, segs_v, compute_times = [], [], [], []
+        for l in range(cfg.num_layers):
+            # same "dequant" span vocabulary as the fp path (critical-path
+            # attribution keys on the name): here it times the packed upload
+            if tracer is not None:
+                with tracer.span(req_id, "dequant", cat="engine", layer=l,
+                                 resident="packed"):
+                    pkv = layer_payload_to_packed_kv(
+                        res.payloads[l], n_chunks, self.spec, layer=l)
+            else:
+                pkv = layer_payload_to_packed_kv(
+                    res.payloads[l], n_chunks, self.spec, layer=l)
+            packed_layers.append(pkv)
+            t0 = time.perf_counter()
+            x, sk, sv = self.runner._layer_packed(
+                self._layer_params(l), x, pkv.as_tuple(), positions,
+                bits=pkv.bits, group=pkv.group, chunk_tokens=pkv.chunk_tokens,
+                use_fused=self._use_fused, interpret=None)
+            x = jax.block_until_ready(x)
+            dt = time.perf_counter() - t0
+            compute_times.append(dt)
+            if tracer is not None:
+                tracer.span_at(req_id, "compute", t0, t0 + dt, cat="engine",
+                               layer=l)
+            segs_k.append(sk)
+            segs_v.append(sv)
+        t0 = time.perf_counter()
+        lg = np.asarray(jax.block_until_ready(
+            self._final(self.params, x))[0], np.float32)
+        final_dt = time.perf_counter() - t0
+        ready = [e.t_ready_s for e in res.events]
+        ttft = pipeline_ttft(ready, compute_times) + final_dt
+        stalls = per_layer_stalls(ready, compute_times)
+        if tracer is not None:
+            self._emit_model_timeline(req_id, ready, compute_times, final_dt)
+        seg_cache = jnp.stack([jnp.stack([k, v])
+                               for k, v in zip(segs_k, segs_v)])
+        self._commit_suffix(tokens, seg_cache, n_chunks, req_id)
+        self._last_cache = None
+        self._last_packed = (packed_layers, seg_cache, P)
         return RequestResult(req_id, lg, [], P, Delivery.LAYERWISE, ttft,
                              sum(compute_times) + final_dt, res.completion_s,
                              stalls)
@@ -395,7 +531,34 @@ class ServingEngine:
             new = self.orch.commit(tokens, objs)
         self.stats.add(commits=len(new))
 
+    def _commit_suffix(self, tokens, seg_cache, n_prefix_chunks, req_id="req"):
+        """Commit only the *suffix* chunks of a packed-resident serve.
+
+        The prefix chunks matched, so their objects are already in the store
+        under the same content-addressed keys; re-encoding them would require
+        dequantizing the packed prefix just to commit bytes that exist.  The
+        index insert still sees the full token stream (prefix keys resolve to
+        existing entries); `orch.commit` only uploads keys present in the
+        object dict, so handing it the suffix objects alone is exactly the
+        dedup the store would have done."""
+        if not self.sync_commit:
+            return
+        keys_all = chunk_keys(tokens, self.spec.chunk_tokens)
+        keys_suf = keys_all[n_prefix_chunks:]
+        if self.tracer is not None:
+            with self.tracer.span(req_id, "commit", cat="engine") as a:
+                objs = cache_to_chunks(np.asarray(seg_cache), keys_suf,
+                                       self.spec)
+                new = self.orch.commit(tokens, objs)
+                a["new_chunks"] = len(new)
+        else:
+            objs = cache_to_chunks(np.asarray(seg_cache), keys_suf, self.spec)
+            new = self.orch.commit(tokens, objs)
+        self.stats.add(commits=len(new))
+
     def _greedy_decode(self, result, tokens, max_new_tokens) -> list[int]:
+        if self._last_packed is not None:
+            return self._greedy_decode_packed(result, tokens, max_new_tokens)
         cache = self._last_cache
         cfg = self.cfg
         S0 = len(tokens)
@@ -415,6 +578,37 @@ class ServingEngine:
             pos = jnp.asarray([S0 + i], jnp.int32)
             lg, cache = self._decode(self.params, cache,
                                      jnp.asarray([[tok]], jnp.int32), pos)
+            tok = int(np.argmax(np.asarray(lg[0])[:cfg.vocab_size]))
+            out.append(tok)
+        return out
+
+    def _greedy_decode_packed(self, result, tokens, max_new_tokens
+                              ) -> list[int]:
+        """Greedy decode with the prefix still quantized-resident: every
+        step's attention reads the packed prefix through the fused decode
+        kernel and only the fp *suffix* cache grows."""
+        packed_layers, seg_cache, P = self._last_packed
+        cfg = self.cfg
+        S0 = len(tokens)
+        room = max_new_tokens
+        # seg_cache: [L, 2, 1, S_suf, KV, dh] -> grow the suffix dim
+        pad = [(0, 0)] * seg_cache.ndim
+        pad[3] = (0, room)
+        seg_cache = jnp.pad(seg_cache, pad)
+        sk, sv = seg_cache[:, 0], seg_cache[:, 1]
+        packed_all = tuple(pkv.as_tuple() for pkv in packed_layers)
+        bits_map = tuple(pkv.bits for pkv in packed_layers)
+        group_map = tuple(pkv.group for pkv in packed_layers)
+        out = []
+        tok = int(np.argmax(result.logits[:cfg.vocab_size]))
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            pos = jnp.asarray([S0 + i], jnp.int32)
+            lg, sk, sv = self.runner._decode_packed(
+                self.params, packed_all, sk, sv,
+                jnp.asarray([[tok]], jnp.int32), pos, bits_map=bits_map,
+                group_map=group_map, chunk_tokens=self.spec.chunk_tokens,
+                use_fused=self._use_fused, interpret=None)
             tok = int(np.argmax(np.asarray(lg[0])[:cfg.vocab_size]))
             out.append(tok)
         return out

@@ -16,6 +16,8 @@ reference (`codec.ref`).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax.numpy as jnp
@@ -23,7 +25,26 @@ import jax.numpy as jnp
 from repro.codec import get_codec
 from repro.core import KVSpec
 from repro.kernels import ops as kernel_ops
+from repro.kernels.ref import ref_dequant_cache
 from repro.models.config import ModelConfig
+
+# Explicit quantized-width -> standalone dequant kernel dispatch.  A lookup
+# (rather than `4 -> packed4, anything else -> int8`) means a future 2/6-bit
+# layer raises here instead of silently dequantizing garbage through the
+# int8 kernel.
+_DEQUANT_OPS = {
+    8: kernel_ops.kv_dequant_op,
+    4: kernel_ops.kv_dequant_packed4_op,
+}
+
+
+def _dequant_op_for(bits: int):
+    try:
+        return _DEQUANT_OPS[bits]
+    except KeyError:
+        raise ValueError(
+            f"no dequant kernel for {bits}-bit payloads; known widths: "
+            f"{sorted(_DEQUANT_OPS)}") from None
 
 
 def cache_to_chunks(cache, keys: list[bytes], spec: KVSpec, batch_row: int = 0,
@@ -83,9 +104,8 @@ def layer_payload_to_device_kv(payload: bytes, num_chunks: int, spec: KVSpec,
         k, v = layer_payload_to_kv(payload, num_chunks, spec, dtype, layer)
         return jnp.asarray(k), jnp.asarray(v)
     q, scales = codec.parse_layer_payload(payload, num_chunks, spec, layer)
-    group = getattr(codec, "group", 1)
-    op = (kernel_ops.kv_dequant_packed4_op
-          if codec.layer_bits(spec, layer) == 4 else kernel_ops.kv_dequant_op)
+    group = codec.layer_group(spec, layer)
+    op = _dequant_op_for(codec.layer_bits(spec, layer))
     kq = np.ascontiguousarray(q[:, :G])
     vq = np.ascontiguousarray(q[:, G:])
     k = op(jnp.asarray(kq), jnp.asarray(np.ascontiguousarray(scales[:, 0, :])),
@@ -93,6 +113,85 @@ def layer_payload_to_device_kv(payload: bytes, num_chunks: int, spec: KVSpec,
     v = op(jnp.asarray(vq), jnp.asarray(np.ascontiguousarray(scales[:, 1, :])),
            group=group, out_dtype=jnp.dtype(dtype))
     return k.reshape(shape), v.reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayerKV:
+    """One layer's prefix KV kept *quantized-resident* on device.
+
+    The wire image of an aggregated layer payload, uploaded as-is: packed
+    integer tensors plus the per-chunk fp16 scale rows, never expanded to
+    model width in HBM.  The fused attention kernels
+    (`decode_attention_quant` / `flash_attention_quant`) consume exactly
+    these arrays; `kernels.ref.ref_dequant_cache` is the composed fallback.
+    Leading batch dim is 1 (one sequence's prefix), matching the engines'
+    prefix-KV convention."""
+
+    k_q: jnp.ndarray       # [1, P, KV, dh'] int8 (or uint8 nibbles, dh'=dh/2)
+    v_q: jnp.ndarray       # [1, P, KV, dh']
+    k_scales: jnp.ndarray  # [1, NC, W/group] fp16
+    v_scales: jnp.ndarray  # [1, NC, W/group]
+    bits: int
+    group: int
+    chunk_tokens: int
+
+    @property
+    def tokens(self) -> int:
+        return self.k_q.shape[1]
+
+    @property
+    def resident_bytes(self) -> int:
+        """HBM bytes this prefix pins (the wire-resident footprint)."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in (self.k_q, self.v_q, self.k_scales, self.v_scales))
+
+    def as_tuple(self):
+        """The jit-friendly array 4-tuple the fused kernel ops take."""
+        return (self.k_q, self.v_q, self.k_scales, self.v_scales)
+
+
+def layer_payload_to_packed_kv(payload: bytes, num_chunks: int, spec: KVSpec,
+                               layer: int = 0) -> PackedLayerKV:
+    """One aggregated layer payload -> quantized-resident device arrays.
+
+    The quantized-resident counterpart of `layer_payload_to_device_kv`: the
+    host->device copy moves wire bytes and *stays* wire-sized — no dequant
+    kernel runs; dequantization happens inside the fused attention kernels
+    at read time.  Raises for lossless codecs (identity has no packed form)
+    and for bit widths without a registered kernel."""
+    codec = get_codec(spec.codec)
+    if codec.lossless:
+        raise ValueError(
+            f"codec {spec.codec!r} is lossless; quantized-resident caching "
+            f"needs a quantized codec")
+    bits = codec.layer_bits(spec, layer)
+    _dequant_op_for(bits)  # unknown widths raise before any upload
+    group = codec.layer_group(spec, layer)
+    G = spec.chunk_tokens
+    q, scales = codec.parse_layer_payload(payload, num_chunks, spec, layer)
+    dhp = spec.head_dim // 2 if bits == 4 else spec.head_dim
+    shape = (1, num_chunks * G, spec.num_kv_heads, dhp)
+    kq = np.ascontiguousarray(q[:, :G]).reshape(shape)
+    vq = np.ascontiguousarray(q[:, G:]).reshape(shape)
+    ks = np.ascontiguousarray(scales[:, 0, :])[None]
+    vs = np.ascontiguousarray(scales[:, 1, :])[None]
+    return PackedLayerKV(jnp.asarray(kq), jnp.asarray(vq), jnp.asarray(ks),
+                         jnp.asarray(vs), bits=bits, group=group,
+                         chunk_tokens=G)
+
+
+def packed_layer_to_fp(pkv: PackedLayerKV, dtype) -> tuple[jnp.ndarray,
+                                                           jnp.ndarray]:
+    """Expand a packed-resident layer to model-width (k, v) [1, P, KV, dh].
+
+    The materialization boundary: continuous-batching decode pools multiple
+    sequences into one fp cache, so a packed prefix entering the batcher is
+    expanded exactly once here."""
+    k = ref_dequant_cache(pkv.k_q, pkv.k_scales, bits=pkv.bits,
+                          group=pkv.group, chunk_tokens=pkv.chunk_tokens)
+    v = ref_dequant_cache(pkv.v_q, pkv.v_scales, bits=pkv.bits,
+                          group=pkv.group, chunk_tokens=pkv.chunk_tokens)
+    return k.astype(dtype), v.astype(dtype)
 
 
 def prefix_kv_from_payloads(payloads: list[bytes], num_chunks: int,
